@@ -1,0 +1,71 @@
+"""Paper Table V: component ablation — compression / partitioning / engine
+in pairs vs the full cross-level middleware, under one resource context."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import (ActionEvaluator, Budgets, ResourceContext,
+                        nondominated_front, select_online)
+from repro.core.actions import Action, OffloadChoice, default_action_space
+from repro.elastic import VariantSpec
+from repro.engine.schedule import EngineConfig
+from repro.models.configs import InputShape
+
+from .common import emit, header
+
+VARIANTS = (VariantSpec(), VariantSpec(depth_ratio=0.75),
+            VariantSpec(width_ratio=0.5),
+            VariantSpec(rank_ratio=0.5, width_ratio=0.5))
+
+
+def _select(ev, ctx, budgets, *, compression: bool, offload: bool,
+            engine: bool):
+    variants = VARIANTS if compression else (VariantSpec(),)
+    actions = list(default_action_space(variants, allow_offload=offload))
+    if not engine:
+        actions = [dataclasses.replace(a, engine=EngineConfig(
+            fuse=False, parallel_streams=1, remat_policy="none"))
+            for a in actions]
+        actions = list(dict.fromkeys(actions))
+    evals = [ev.evaluate(a, ctx) for a in actions]
+    front = nondominated_front(evals)
+    return select_online(front, ctx, budgets)
+
+
+def run() -> None:
+    header("component ablation (Table V)")
+    cfg = get_config("paper-backbone")
+    shape = InputShape("bench", 512, 8, "prefill")
+    ev = ActionEvaluator(cfg, shape)
+    ctx = ResourceContext(battery_frac=0.5, mem_free_frac=0.4,
+                          chips_available=1)
+    budgets = Budgets(memory_bytes=1.5e9)
+    combos = {
+        "compression+partition": dict(compression=True, offload=True,
+                                      engine=False),
+        "compression+engine": dict(compression=True, offload=False,
+                                   engine=True),
+        "partition+engine": dict(compression=False, offload=True,
+                                 engine=True),
+        "full_crowdhmtware": dict(compression=True, offload=True,
+                                  engine=True),
+    }
+    results = {}
+    for name, kw in combos.items():
+        e = _select(ev, ctx, budgets, **kw)
+        results[name] = e
+        emit(f"ablation.{name}", e.latency_s * 1e6,
+             f"A={e.accuracy:.3f};M={e.memory_bytes/1e6:.1f}MB;"
+             f"E={e.energy_j:.2e}J")
+    full = results["full_crowdhmtware"]
+    best_pair = min((e for k, e in results.items()
+                     if k != "full_crowdhmtware"),
+                    key=lambda e: e.latency_s)
+    emit("ablation.crosslevel_gain", full.latency_s * 1e6,
+         f"latency_vs_best_pair={best_pair.latency_s/max(full.latency_s,1e-12):.2f}x;"
+         f"mem_vs_best_pair={best_pair.memory_bytes/max(full.memory_bytes,1):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Table II: adaptation under stepped memory budgets
+(100% / 75% / 50% / 25%) — memory tracks the budget, accuracy holds."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import get_config
+from repro.core import AdaptationLoop, Budgets, ResourceContext
+from repro.models.configs import InputShape
+
+from .common import emit, header
+
+
+def run() -> None:
+    header("dynamic memory budgets (Table II)")
+    cfg = get_config("paper-backbone")
+    shape = InputShape("bench", 512, 8, "prefill")
+    loop = AdaptationLoop(cfg=cfg, shape=shape, allow_offload=True,
+                          hysteresis=0.0)
+    loop.build_pareto(evolve=False)
+    base_mem = None
+    for frac in (1.0, 0.75, 0.5, 0.25):
+        ctx = ResourceContext(mem_free_frac=frac, chips_available=1)
+        # anchor the 100% budget at the unrestricted selection's memory
+        if base_mem is not None:
+            loop.budgets = Budgets(memory_bytes=base_mem * frac)
+        d = loop.tick(ctx)
+        if base_mem is None:
+            base_mem = d.eval.memory_bytes
+        emit(f"budget.{int(frac*100)}pct", d.eval.latency_s * 1e6,
+             f"A={d.eval.accuracy:.3f};M={d.eval.memory_bytes/1e6:.1f}MB;"
+             f"cap={base_mem*frac/1e6:.1f}MB;ok="
+             f"{int(d.eval.memory_bytes <= base_mem*frac*1.001)};"
+             f"action={'+'.join(d.action.variant.operators()) or 'full'}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Paper Fig. 10 + Table III: the elastic-inference component against the
+compression baselines (Fire, SVD, OFA, AdaDeep), and the paper's named
+operator combinations — measured CPU latency + params + MACs + energy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.baselines import HANDCRAFTED, adadeep_select, ofa_select
+from repro.configs import get_config
+from repro.core import ActionEvaluator, ResourceContext
+from repro.core.actions import Action
+from repro.elastic import (FULL_SPEC, NAMED_COMBOS, ElasticSupernet,
+                           VariantSpec, derive_variant, variant_cost)
+from repro.models import forward, init_params
+from repro.models.configs import InputShape
+
+from .common import emit, header, time_fn
+
+
+def _count_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))
+
+
+def run() -> None:
+    header("elastic inference vs compression baselines (Fig 10, Table III)")
+    cfg = get_config("paper-backbone")
+    shape = InputShape("bench", 256, 4, "prefill")
+    ev = ActionEvaluator(cfg, shape)
+    ctx = ResourceContext()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 128), 0,
+                                cfg.vocab_size)
+    sn = ElasticSupernet(cfg, params)
+
+    budget = ev.evaluate(Action(), ctx).latency_s * 0.6
+    selections = dict(HANDCRAFTED)
+    selections["adadeep"] = adadeep_select(cfg, shape, budget, ev)
+    selections["ofa"] = ofa_select(cfg, shape, budget, sn.action_space(), ev)
+    # CrowdHMTware: profiler+optimizer pick (context-aware)
+    from repro.core.loop import AdaptationLoop
+    loop = AdaptationLoop(cfg=cfg, shape=shape, supernet=sn,
+                          allow_offload=False)
+    loop.build_pareto(evolve=False)
+    selections["crowdhmtware"] = loop.tick(ctx).action.variant
+
+    full_cost = variant_cost(cfg, FULL_SPEC, shape.seq_len)
+    for name, spec in selections.items():
+        vcfg, vp = derive_variant(cfg, params, spec)
+        f = jax.jit(lambda p, t: forward(p, vcfg, t)[0])
+        us = time_fn(f, vp, tokens)
+        cost = variant_cost(cfg, spec, shape.seq_len)
+        e = ev.evaluate(Action(variant=spec), ctx)
+        emit(f"elastic.{name}", us,
+             f"macsx={full_cost['flops_per_token']/cost['flops_per_token']:.2f};"
+             f"params={_count_params(vp)/1e6:.1f}M;"
+             f"A={e.accuracy:.3f};E={e.energy_j:.2e}J")
+
+    header("operator combinations (Table III)")
+    for name, spec in NAMED_COMBOS.items():
+        vcfg, vp = derive_variant(cfg, params, spec)
+        f = jax.jit(lambda p, t: forward(p, vcfg, t)[0])
+        us = time_fn(f, vp, tokens)
+        cost = variant_cost(cfg, spec, shape.seq_len)
+        emit(f"combo.{name}", us,
+             f"macsx={full_cost['flops_per_token']/cost['flops_per_token']:.2f};"
+             f"params={_count_params(vp)/1e6:.1f}M")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Paper Table IV: frontend / backend / cross-level optimization on one
+model — measured CPU wall-time for each optimization stack plus the IR-level
+memory/fusion accounting."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.elastic import VariantSpec, derive_variant
+from repro.engine import fuse_graph, plan_memory, plan_parallelism
+from repro.models import RuntimeOptions, forward, init_params
+from repro.offload import build_model_graph
+
+from .common import emit, header, time_fn
+
+
+def run() -> None:
+    header("model-adaptive engine (Table IV)")
+    cfg = get_config("paper-backbone")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 512), 0,
+                                cfg.vocab_size)
+
+    def bench(name, vcfg, vp, opts, extra=""):
+        f = jax.jit(lambda p, t: forward(p, vcfg, t, opts)[0])
+        us = time_fn(f, vp, tokens)
+        if not hasattr(bench, "base"):
+            bench.base = us
+        emit(f"engine.{name}", us,
+             f"speedup={bench.base/us:.3f}x;{extra}")
+        return us
+
+    base_opts = RuntimeOptions(attn_impl="full")
+    bench("original", cfg, params, base_opts)
+
+    # frontend-level compression (resource-friendly frontend compilation)
+    lcfg, lp = derive_variant(cfg, params, VariantSpec(rank_ratio=0.5))
+    bench("lowrank_decomp", lcfg, lp, base_opts)
+    pcfg, ppar = derive_variant(cfg, params, VariantSpec(width_ratio=0.5))
+    bench("pruning", pcfg, ppar, base_opts)
+
+    # backend-level: operator impl selection (fusion analogue) — chunked
+    # attention keeps score tiles cache-resident, XLA fuses the chain
+    bench("operator_fusion(chunked)", cfg, params,
+          RuntimeOptions(attn_impl="chunked", q_chunk=128, k_chunk=256))
+
+    # cross-level: pruning + fused attention path
+    bench("cross_level(prune+fuse)", pcfg, ppar,
+          RuntimeOptions(attn_impl="chunked", q_chunk=128, k_chunk=256))
+
+    header("engine IR accounting (fusion + memory allocator)")
+    g = build_model_graph(cfg, 1, 512)
+    g2, reports = fuse_graph(g)
+    fused_ops = sum(r.ops_fused for r in reports)
+    saved = sum(r.bytes_saved for r in reports)
+    emit("engine.ir.fusion", 0.0,
+         f"ops={len(g.nodes)}->{len(g2.nodes)};fused={fused_ops};"
+         f"traffic_saved={saved/1e6:.1f}MB")
+    plan = plan_memory(g)
+    emit("engine.ir.memory_alloc", 0.0,
+         f"naive={plan.naive_bytes/1e6:.1f}MB;peak={plan.peak_bytes/1e6:.1f}MB;"
+         f"reuse={1/plan.reuse_ratio:.1f}x")
+    pp2 = plan_parallelism(g, streams=2)
+    emit("engine.ir.op_parallelism", 0.0,
+         f"speedup={pp2.speedup:.2f}x;streams=2")
+
+
+if __name__ == "__main__":
+    run()

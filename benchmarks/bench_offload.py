@@ -1,0 +1,51 @@
+"""Paper Fig. 11: scalable offloading vs CAS and DADS — placement latency,
+per-device memory, transfer overhead across device pools and granularities."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.offload import (DEVICE_POOLS, build_model_graph, local_only,
+                           place_cas, place_dads, place_dp, pre_partition)
+
+from .common import emit, header
+
+
+def run() -> None:
+    header("scalable offloading vs CAS/DADS (Fig 11)")
+    cfg = get_config("paper-backbone")
+    g = build_model_graph(cfg, batch=1, seq=256)
+    pp = pre_partition(g)
+    for pool in ("edge_pair", "edge_trio"):
+        devs = DEVICE_POOLS[pool]
+        base = local_only(pp, devs)
+        for name, fn in (("crowdhmtware_dp", place_dp), ("cas", place_cas),
+                         ("dads", place_dads)):
+            t0 = time.perf_counter()
+            pl = fn(pp, devs)
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"offload.{pool}.{name}", us,
+                 f"latency={pl.latency_s*1e3:.2f}ms;"
+                 f"vs_local={base.latency_s/pl.latency_s:.2f}x;"
+                 f"xfer={pl.transfer_s*1e3:.2f}ms;"
+                 f"dev0_mem={pl.per_device_mem[0]/1e6:.1f}MB;"
+                 f"cuts={len(pl.cuts)}")
+
+    header("pre-partition granularity sweep")
+    devs = DEVICE_POOLS["edge_pair"]
+    for level in range(4):
+        t0 = time.perf_counter()
+        pl = place_dp(pp, devs, level=level)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"offload.granularity.L{level}", us,
+             f"units={len(pp.units(level))};latency={pl.latency_s*1e3:.2f}ms")
+
+    header("pod-pipeline placement (TPU mesh-slice adaptation)")
+    devs = DEVICE_POOLS["pod_pipeline"]
+    pl = place_dp(pp, devs, level=3)
+    emit("offload.pod_pipeline", pl.latency_s * 1e6,
+         f"cuts={len(pl.cuts)};xfer={pl.transfer_s*1e6:.2f}us")
+
+
+if __name__ == "__main__":
+    run()

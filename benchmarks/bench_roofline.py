@@ -1,0 +1,45 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch ×
+shape × mesh) roofline table (compute / memory / collective terms, dominant
+bottleneck, MODEL_FLOPS ratio)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import emit, header
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def run() -> None:
+    header("roofline table from dry-run artifacts (§Roofline)")
+    if not DRYRUN_DIR.exists():
+        emit("roofline.missing", 0.0,
+             "run: python -m repro.launch.dryrun --arch all --shape all "
+             "--both-meshes --out experiments/dryrun")
+        return
+    rows = []
+    for fn in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(fn.read_text())
+        if r.get("status") != "ok":
+            emit(f"roofline.{fn.stem}", 0.0, "status=FAIL")
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        rows.append((r["arch"], r["shape"], r["mesh"], rf))
+        emit(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             bound * 1e6,
+             f"dom={rf['dominant']};"
+             f"C={rf['compute_s']:.3e};M={rf['memory_s']:.3e};"
+             f"X={rf['collective_s']:.3e};"
+             f"useful={rf['useful_compute_ratio']:.2f}")
+    # summary: dominant-term histogram
+    from collections import Counter
+    doms = Counter(rf["dominant"] for _, _, _, rf in rows)
+    emit("roofline.summary", 0.0,
+         ";".join(f"{k}={v}" for k, v in sorted(doms.items()))
+         + f";total={len(rows)}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Paper §III-A2: runtime parameter adaptation under data drift.
+
+A synthetic distribution shift degrades next-token loss; TENT-style
+norm-scale adaptation (unsupervised, on live tokens) recovers part of it.
+Measured with REAL training/eval on the paper-backbone model: train on the
+base distribution briefly, drift the stream, adapt, compare losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.elastic import tta_step
+from repro.launch.train import train_loop
+from repro.models import forward, lm_loss
+from repro.models.configs import InputShape
+
+from .common import emit, header
+
+
+def _eval_loss(params, cfg, data, n=4):
+    tot = 0.0
+    for i in range(n):
+        b = data.batch(100 + i)
+        logits, _ = forward(params, cfg, jnp.asarray(b["tokens"]))
+        tot += float(lm_loss(logits, jnp.asarray(b["labels"])))
+    return tot / n
+
+
+def run() -> None:
+    header("test-time adaptation under drift (paper §III-A2)")
+    cfg = get_config("paper-backbone").with_updates(
+        num_layers=4, d_model=128, num_heads=4, num_kv_heads=4, head_dim=32,
+        d_ff=512, vocab_size=512)
+    shape = InputShape("tta", 64, 8, "train")
+    out = train_loop(cfg, shape, steps=40, log_every=40)
+    params = out["params"]
+
+    clean = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                   batch_size=8))
+    drifted = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                     batch_size=8, drift=0.8))
+    base = _eval_loss(params, cfg, clean)
+    degraded = _eval_loss(params, cfg, drifted)
+    emit("tta.baseline", 0.0, f"clean_loss={base:.3f};"
+         f"drifted_loss={degraded:.3f};gap={degraded-base:+.3f}")
+
+    # unsupervised adaptation on live drifted tokens (no labels used;
+    # objective="self": live tokens are their own next-token supervision)
+    adapted = params
+    for i in range(12):
+        live = jnp.asarray(drifted.batch(i)["tokens"])
+        adapted, ent = tta_step(adapted, cfg, live, lr=5e-2,
+                                objective="self")
+    recovered = _eval_loss(adapted, cfg, drifted)
+    rec_frac = (degraded - recovered) / max(degraded - base, 1e-9)
+    emit("tta.adapted", 0.0,
+         f"drifted_loss={recovered:.3f};recovered_frac={rec_frac:.2f};"
+         f"final_entropy={float(ent):.3f}")
+    # adaptation must not catastrophically forget the clean distribution
+    clean_after = _eval_loss(adapted, cfg, clean)
+    emit("tta.forgetting", 0.0,
+         f"clean_after={clean_after:.3f};delta={clean_after-base:+.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run [--only overall,engine,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = ("overall", "dynamic_budgets", "elastic", "offload", "engine",
+          "ablation", "case_study", "tta", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    chosen = [s.strip() for s in args.only.split(",") if s.strip()] or SUITES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"bench_{name},0.0,ERROR")
+            traceback.print_exc()
+        print(f"bench_{name}.wall,{(time.time()-t0)*1e6:.0f},", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: register a model with the CrowdHMTware middleware and let
+the cross-level adaptation loop pick the deployment strategy as the
+context changes.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import Budgets, Middleware, ResourceContext
+from repro.models import init_params
+from repro.models.configs import InputShape
+
+
+def main():
+    cfg = get_config("paper-backbone")
+    print(f"backbone: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    # the paper's run.py(device_id, model, IP, PORT, fuse, quan) analogue
+    mw = Middleware(cfg=cfg, params=params,
+                    shape=InputShape("app", 256, 4, "prefill"),
+                    budgets=Budgets(latency_s=0.05, memory_bytes=2e9),
+                    fuse=True, quan=False)
+    print(f"offline Pareto front: {len(mw.loop.front)} configurations")
+
+    # three contexts: plugged in -> battery low -> memory pressure
+    for name, ctx in [
+        ("plugged-in", ResourceContext(battery_frac=0.95)),
+        ("battery-low", ResourceContext(battery_frac=0.15)),
+        ("mem-pressure", ResourceContext(battery_frac=0.5,
+                                         mem_free_frac=0.2)),
+    ]:
+        d = mw.adapt(ctx)
+        print(f"[{name:12s}] {d.reason:10s} -> {d.action.describe()}")
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
+                                    cfg.vocab_size)
+        logits = mw.infer(tokens)
+        print(f"               inferred logits {logits.shape}, "
+              f"A_est={d.eval.accuracy:.3f} "
+              f"E_est={d.eval.energy_j:.2e}J "
+              f"M_est={d.eval.memory_bytes/1e6:.0f}MB")
+    print("\nadaptation log:")
+    print(mw.report())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Adaptive serving: batched requests through the serving engine while the
+middleware swaps elastic variants as the day-long context trace evolves
+(the paper's vehicle/drone case study, §IV-G).
+
+  PYTHONPATH=src python examples/serve_adaptive.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — CrowdHMTware-in-JAX: cross-level co-adaptation middleware for
+TPU-pod DL deployment (see README.md / DESIGN.md)."""
+
+__version__ = "1.0.0"
+
+from repro.models.configs import INPUT_SHAPES, InputShape, ModelConfig
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "__version__"]

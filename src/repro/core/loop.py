@@ -1,0 +1,130 @@
+"""The automated cross-level co-adaptation loop (paper §III-D, Fig. 6).
+
+monitor → profiler → (violation | drift | context change?) → optimizer →
+apply (θ_p variant switch, θ_o re-placement, θ_s engine reconfig) — at a
+fixed tick frequency.  On-device (local mesh) execution is preferred;
+offloading engages only when local resources cannot meet the budgets,
+mirroring the paper's policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.elastic.operators import FULL_SPEC, VariantSpec
+from repro.elastic.supernet import ElasticSupernet
+from repro.models.configs import InputShape, ModelConfig
+
+from .actions import Action, default_action_space
+from .monitor import ResourceContext, ResourceMonitor
+from .optimizer import (ActionEvaluator, Budgets, Evaluation, evolve_pareto,
+                        nondominated_front, select_online)
+from .profiler import HardwareProfile, TPU_V5E
+
+
+@dataclass
+class Decision:
+    tick: int
+    ctx: ResourceContext
+    action: Action
+    eval: Evaluation
+    reason: str
+
+
+@dataclass
+class AdaptationLoop:
+    cfg: ModelConfig
+    shape: InputShape
+    supernet: Optional[ElasticSupernet] = None
+    hw: HardwareProfile = TPU_V5E
+    budgets: Budgets = field(default_factory=Budgets)
+    measured_accuracy: Dict[VariantSpec, float] = field(default_factory=dict)
+    allow_offload: bool = True
+    hysteresis: float = 0.05        # don't switch for <5% predicted gain
+
+    def __post_init__(self):
+        self.monitor = ResourceMonitor()
+        self.evaluator = ActionEvaluator(self.cfg, self.shape, self.hw,
+                                         measured=self.measured_accuracy)
+        variants = (self.supernet.action_space() if self.supernet
+                    else (FULL_SPEC,
+                          VariantSpec(depth_ratio=0.75),
+                          VariantSpec(width_ratio=0.5),
+                          VariantSpec(rank_ratio=0.5, width_ratio=0.5)))
+        self.actions = default_action_space(
+            variants, allow_offload=self.allow_offload,
+            decode=self.shape.is_decode)
+        self.front: List[Evaluation] = []
+        self.current: Optional[Decision] = None
+        self.decisions: List[Decision] = []
+        self._tick = 0
+
+    # ---------------------------------------------------------- offline ---
+    def build_pareto(self, ctx: Optional[ResourceContext] = None,
+                     evolve: bool = True) -> List[Evaluation]:
+        ctx = ctx or ResourceContext()
+        evals = [self.evaluator.evaluate(a, ctx) for a in self.actions]
+        self.front = nondominated_front(evals)
+        if evolve:
+            # evolutionary refinement around the seed front
+            refined = evolve_pareto(self.evaluator,
+                                    [e.action for e in self.front] or
+                                    list(self.actions)[:8], ctx)
+            self.front = nondominated_front(list(self.front) + list(refined))
+        return self.front
+
+    # ----------------------------------------------------------- online ---
+    def tick(self, ctx: ResourceContext) -> Decision:
+        """One adaptation-loop iteration."""
+        self.monitor.set(ctx)
+        self._tick += 1
+        budgets = Budgets(
+            latency_s=self.budgets.latency_s,
+            memory_bytes=min(self.budgets.memory_bytes,
+                             ctx.mem_budget_bytes(
+                                 self.hw.hbm_bytes * ctx.chips_available)))
+        if not self.front:
+            self.build_pareto(ctx, evolve=False)
+
+        # prefer local: filter offloaded actions unless local infeasible
+        local = [e for e in self.front if not e.action.offload.enabled]
+        choice = select_online(local, ctx, budgets)
+        reason = "local"
+        if choice is None or choice.latency_s > budgets.latency_s \
+                or choice.memory_bytes > budgets.memory_bytes:
+            full = select_online(self.front, ctx, budgets)
+            if full is not None:
+                choice, reason = full, "offloaded (local infeasible)"
+        if choice is None:
+            raise RuntimeError("no action available")
+        # re-evaluate under the live context (DVFS derate etc.)
+        choice = self.evaluator.evaluate(choice.action, ctx)
+
+        if self.current is not None:
+            cur = self.evaluator.evaluate(self.current.action, ctx)
+            cur_feasible = (cur.latency_s <= budgets.latency_s
+                            and cur.memory_bytes <= budgets.memory_bytes)
+            gain = (choice.accuracy - cur.accuracy) \
+                + (cur.energy_j - choice.energy_j) / max(cur.energy_j, 1e-9)
+            if cur_feasible and gain < self.hysteresis:
+                choice, reason = cur, "hold (hysteresis)"
+        d = Decision(tick=self._tick, ctx=ctx, action=choice.action,
+                     eval=choice, reason=reason)
+        self.current = d
+        self.decisions.append(d)
+        return d
+
+    def run_trace(self, trace) -> List[Decision]:
+        return [self.tick(ctx) for ctx in trace]
+
+    def materialize(self):
+        """Return (variant_cfg, variant_params, runtime_options) for the
+        currently selected action (requires a supernet)."""
+        if self.current is None or self.supernet is None:
+            raise RuntimeError("no decision or no supernet attached")
+        a = self.current.action
+        vcfg, vparams = self.supernet.variant(a.variant)
+        return vcfg, vparams, a.engine.to_runtime_options()

@@ -1,0 +1,12 @@
+from .operators import (FULL_SPEC, NAMED_COMBOS, OPERATOR_NAMES, VariantSpec,
+                        derive_variant, variant_cost)
+from .supernet import ElasticSupernet
+from .early_exit import attach_exits, early_exit_predict, forward_with_exits
+from .ensemble import ensemble_loss, sample_variant_specs, sliced_forward
+from .tta import tta_loss, tta_step
+
+__all__ = ["FULL_SPEC", "NAMED_COMBOS", "OPERATOR_NAMES", "VariantSpec",
+           "derive_variant", "variant_cost", "ElasticSupernet",
+           "attach_exits", "early_exit_predict", "forward_with_exits",
+           "ensemble_loss", "sample_variant_specs", "sliced_forward",
+           "tta_loss", "tta_step"]

@@ -1,0 +1,96 @@
+"""Multi-branch early exits (paper §III-A1).
+
+Exit heads (norm + linear-to-vocab via the tied embedding) are attached at
+chosen depths of the backbone.  At inference, per-example confidence
+(max softmax prob) against a threshold decides the exit — realized with
+masking so the whole batch stays a single jit region (no data-dependent
+shapes), which is the TPU-idiomatic version of the paper's branch exits.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import Params, cast_params, dtype_of, embed_lookup, rms_norm, unembed
+from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+from repro.models.transformer import _pattern_period, apply_stack
+
+
+def attach_exits(cfg: ModelConfig, params: Params, key: jax.Array,
+                 positions: Sequence[int]) -> Params:
+    """Add exit-head parameters at the given layer indices."""
+    out = dict(params)
+    dtype = dtype_of(cfg.param_dtype)
+    out["exits"] = {
+        "positions": tuple(int(p) for p in positions),
+        "norms": jnp.zeros((len(positions), cfg.d_model), dtype),
+    }
+    return out
+
+
+def forward_with_exits(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       opts: RuntimeOptions = DEFAULT_OPTIONS
+                       ) -> List[jax.Array]:
+    """Return logits at every exit position plus the final head.
+
+    Runs the stack in segments between exit positions (segments still scan).
+    """
+    act_dt = dtype_of(cfg.activation_dtype)
+    ps = cast_params(params, act_dt)
+    x = embed_lookup(ps["embed"], tokens).astype(act_dt)
+    positions = list(params["exits"]["positions"]) if "exits" in params else []
+    bounds = positions + [cfg.num_layers]
+    start = 0
+    outs = []
+    stack = ps["layers"]
+    for i, end in enumerate(bounds):
+        seg = jax.tree_util.tree_map(lambda a: a[start:end], stack)
+        if end > start:
+            x, _ = apply_stack(seg, x, cfg, opts,
+                               shared=ps.get("shared_attn"))
+        if i < len(positions):
+            h = rms_norm(x, ps["exits"]["norms"][i], cfg.norm_eps)
+            outs.append(unembed(ps["embed"], h))
+        start = end
+    h = rms_norm(x, ps["final_norm"], cfg.norm_eps)
+    outs.append(unembed(ps["embed"], h))
+    return outs
+
+
+def early_exit_predict(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                       threshold: float = 0.7,
+                       opts: RuntimeOptions = DEFAULT_OPTIONS
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Batched adaptive early exit.
+
+    Returns (logits (B,S,V), exit_depth (B,S) — index of the exit taken).
+    Confidence = max softmax probability of the exit head; once an example
+    clears the threshold its logits are frozen (masking semantics).
+    """
+    outs = forward_with_exits(params, cfg, tokens, opts)
+    n = len(outs)
+    logits = outs[-1].astype(jnp.float32)
+    chosen = jnp.full(logits.shape[:-1], n - 1, jnp.int32)
+    done = jnp.zeros(logits.shape[:-1], bool)
+    result = logits
+    for i, lg in enumerate(outs[:-1]):
+        lg = lg.astype(jnp.float32)
+        conf = jnp.max(jax.nn.softmax(lg, axis=-1), axis=-1)
+        take = (conf >= threshold) & ~done
+        result = jnp.where(take[..., None], lg, result)
+        chosen = jnp.where(take, i, chosen)
+        done = done | take
+    return result, chosen
+
+
+def expected_exit_flops(cfg: ModelConfig, exit_depth: jax.Array,
+                        positions: Sequence[int], seq_len: int) -> float:
+    """Average per-token FLOPs given realized exit depths (for the profiler)."""
+    bounds = list(positions) + [cfg.num_layers]
+    per_layer = cfg.flops_per_token(seq_len) / max(cfg.num_layers, 1)
+    depths = jnp.asarray([bounds[i] for i in range(len(bounds))])
+    used = jnp.take(depths, exit_depth)
+    return float(jnp.mean(used) * per_layer)

@@ -1,0 +1,86 @@
+"""Offline ensemble training of backbone + variants (paper §III-A1).
+
+The paper moves retraining into a one-time ensemble-training phase: the
+backbone is trained to high accuracy, then variants are co-trained with
+weight recycling so that any runtime subset keeps accuracy.  Here the
+variants ARE slices of the backbone (supernet), so ensemble training is
+sandwich-style (slimmable networks): each step trains the full model, the
+smallest variant, and random intermediate variants, with the full model
+distilling into the slices.  Gradients flow into the same backbone tensors
+— that is the weight recycling.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import Params
+from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+from repro.models.transformer import forward, lm_loss
+
+from .operators import FULL_SPEC, VariantSpec
+
+
+def sliced_forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   spec: VariantSpec, opts: RuntimeOptions = DEFAULT_OPTIONS
+                   ) -> jax.Array:
+    """Forward through a *differentiable* weight-recycled slice.
+
+    Unlike ``derive_variant`` (numpy, importance-ordered — for inference),
+    this takes prefix slices so gradients flow into the backbone tensors:
+    depth -> first n layers, width -> first k FFN channels.  Prefix slicing
+    during ensemble training is what MAKES prefix channels the important
+    ones at inference (OFA/slimmable training convention).
+    """
+    p = dict(params)
+    n_layers = max(1, int(round(cfg.num_layers * spec.depth_ratio)))
+    vcfg = cfg
+    layers = params["layers"]
+    if spec.width_ratio < 1.0 and cfg.d_ff and cfg.arch_type == "dense":
+        f2 = max(8, int(cfg.d_ff * spec.width_ratio) // 8 * 8)
+        ffn = {k: (v[:, :, :f2] if k in ("w_up", "w_gate") else v[:, :f2, :])
+               for k, v in layers["ffn"].items()}
+        layers = {**layers, "ffn": ffn}
+        vcfg = vcfg.with_updates(d_ff=f2)
+    p["layers"] = layers
+    logits, _ = forward(p, vcfg, tokens, opts, num_layers=n_layers)
+    return logits
+
+
+def ensemble_loss(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  labels: jax.Array, key: jax.Array,
+                  specs: Sequence[VariantSpec] = (),
+                  distill_weight: float = 0.5,
+                  opts: RuntimeOptions = DEFAULT_OPTIONS) -> jax.Array:
+    """Sandwich-rule ensemble loss: full + smallest + sampled variants.
+
+    The full model trains on data; variants train on data + KL-distillation
+    from the (stop-gradient) full model.
+    """
+    full_logits, aux = forward(params, cfg, tokens, opts)
+    loss = lm_loss(full_logits, labels) + cfg.router_aux_weight * aux
+    teacher = jax.lax.stop_gradient(
+        jax.nn.log_softmax(full_logits.astype(jnp.float32), axis=-1))
+    if not specs:
+        specs = (VariantSpec(depth_ratio=0.5, width_ratio=0.5),)
+    for spec in specs:
+        v_logits = sliced_forward(params, cfg, tokens, spec, opts)
+        v_loss = lm_loss(v_logits, labels)
+        logq = jax.nn.log_softmax(v_logits.astype(jnp.float32), axis=-1)
+        kl = jnp.mean(jnp.sum(jnp.exp(teacher) * (teacher - logq), axis=-1))
+        loss = loss + (1 - distill_weight) * v_loss + distill_weight * kl
+    return loss / (1 + len(specs))
+
+
+def sample_variant_specs(key: jax.Array, n: int = 2) -> Tuple[VariantSpec, ...]:
+    """Random intermediate variants for the sandwich rule."""
+    keys = jax.random.split(key, n)
+    specs = []
+    for k in keys:
+        d, w = jax.random.uniform(k, (2,), minval=0.5, maxval=1.0)
+        specs.append(VariantSpec(depth_ratio=float(jnp.round(d * 4) / 4),
+                                 width_ratio=float(jnp.round(w * 4) / 4)))
+    return tuple(specs)

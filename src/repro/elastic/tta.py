@@ -1,0 +1,105 @@
+"""Test-time adaptation for data drift (paper §III-A2).
+
+Unsupervised entropy minimization that updates ONLY normalization scales
+(TENT-style) — the selective-weight-update strategy the paper uses so that
+adaptation is cheap enough to run inside the serving loop.  The backend
+engine's TTA optimizations (§III-C2: reordered backprop, activation
+compression, sub-batch accumulation) surface here as options.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import Params
+from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+from repro.models.transformer import forward
+
+NORM_KEYS = ("ln", "ln1", "ln2", "ln_cross", "final_norm", "norm_scale",
+             "encoder_norm", "logit_bias")
+
+
+def _is_norm_path(path) -> bool:
+    names = [str(getattr(k, "key", getattr(k, "idx", ""))) for k in path]
+    return any(n in NORM_KEYS for n in names)
+
+
+def split_norm_params(params: Params) -> Tuple[Params, Params]:
+    """(adaptable norm scales, frozen rest) as same-structure masks."""
+    norm = jax.tree_util.tree_map_with_path(
+        lambda p, a: a if _is_norm_path(p) else None, params)
+    return norm
+
+
+def prediction_entropy(logits: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.sum(jnp.exp(logp) * logp, axis=-1))
+
+
+def tta_loss(params: Params, cfg: ModelConfig, tokens: jax.Array,
+             opts: RuntimeOptions = DEFAULT_OPTIONS,
+             objective: str = "entropy", **fwd_kw) -> jax.Array:
+    """Unsupervised adaptation objective on unlabeled live tokens.
+
+    "entropy" — TENT-style prediction-entropy minimization (the paper's
+    classifier setting); "self" — next-token loss on the live stream
+    itself, which for an LM is the natural label-free objective (live
+    tokens ARE their own supervision)."""
+    logits, _ = forward(params, cfg, tokens, opts, **fwd_kw)
+    if objective == "self":
+        from repro.models.transformer import lm_loss
+        return lm_loss(logits[:, :-1], tokens[:, 1:])
+    return prediction_entropy(logits)
+
+
+def tta_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+             lr: float = 1e-3, opts: RuntimeOptions = DEFAULT_OPTIONS,
+             sub_batches: int = 1, objective: str = "entropy",
+             **fwd_kw) -> Tuple[Params, jax.Array]:
+    """One TTA update on unlabeled live tokens.
+
+    ``sub_batches > 1`` accumulates gradients over batch slices (the
+    engine's ❽ memory-swapping / sub-batch accumulation strategy) so peak
+    activation memory shrinks by ~sub_batches at equal statistical effect.
+    Only norm scales receive updates; everything else is structurally
+    frozen by zero-masking the gradient.
+    """
+    b = tokens.shape[0]
+    assert b % sub_batches == 0
+    step = b // sub_batches
+    if "logit_bias" not in params:
+        # lazily attach the adaptable output-prior vector
+        params = dict(params)
+        params["logit_bias"] = jnp.zeros((cfg.padded_vocab,), jnp.float32)
+
+    def loss_fn(p, tok, kw):
+        return tta_loss(p, cfg, tok, opts, objective=objective, **kw)
+
+    grads = None
+    total = 0.0
+    for i in range(sub_batches):
+        sl = slice(i * step, (i + 1) * step)
+        kw = {k: (v[sl] if hasattr(v, "shape") else v)
+              for k, v in fwd_kw.items()}
+        l, g = jax.value_and_grad(loss_fn)(params, tokens[sl], kw)
+        total += l / sub_batches
+        g = jax.tree_util.tree_map(lambda a: a / sub_batches, g)
+        grads = g if grads is None else jax.tree_util.tree_map(
+            jnp.add, grads, g)
+
+    def update(path, p, g):
+        if _is_norm_path(path) and jnp.issubdtype(p.dtype, jnp.floating):
+            names = [str(getattr(k, "key", "")) for k in path]
+            # the output-prior bias sees (p_model - p_live)-scale gradients
+            # (~1/V per entry): give it a proportionally larger step so the
+            # log-prior can actually move within a few adaptation ticks
+            eta = lr * 100.0 if "logit_bias" in names else lr
+            return (p.astype(jnp.float32)
+                    - eta * g.astype(jnp.float32)).astype(p.dtype)
+        return p
+
+    new_params = jax.tree_util.tree_map_with_path(update, params, grads)
+    return new_params, total

@@ -1,0 +1,96 @@
+"""Intermediate activation compression (paper §III-C2 ❼).
+
+Per-block symmetric quantization of activations / KV-cache entries to
+int8 or packed int4, with f32 scales.  Used by
+  * the TTA path — compress saved activations post-forward, decode for
+    backward (store 4/8-bit instead of 32, the paper's claim), and
+  * the serving path — quantized KV cache (kv_cache_dtype="int8").
+
+``repro.kernels.act_quant`` is the Pallas TPU kernel of the same codec;
+this module is its jnp oracle and the CPU execution path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+def _pad_to_block(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % BLOCK
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8: returns (q (..., n), scales (..., n/BLOCK))."""
+    xp, n = _pad_to_block(x)
+    shape = xp.shape[:-1] + (xp.shape[-1] // BLOCK, BLOCK)
+    blocks = xp.reshape(shape).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(xp.shape)[..., :n], scale[..., 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    qp, n = _pad_to_block(q)
+    shape = qp.shape[:-1] + (qp.shape[-1] // BLOCK, BLOCK)
+    blocks = qp.reshape(shape).astype(jnp.float32)
+    x = blocks * scale[..., None]
+    return x.reshape(qp.shape)[..., :n].astype(dtype)
+
+
+def quantize_int4(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int4 packed two-per-byte (uint8 storage)."""
+    xp, n = _pad_to_block(x)
+    shape = xp.shape[:-1] + (xp.shape[-1] // BLOCK, BLOCK)
+    blocks = xp.reshape(shape).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = amax / 7.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -7, 7).astype(jnp.int8) + 8
+    q = q.reshape(xp.shape).astype(jnp.uint8)
+    lo, hi = q[..., 0::2], q[..., 1::2]
+    packed = (lo | (hi << 4)).astype(jnp.uint8)
+    return packed, scale[..., 0]
+
+
+def dequantize_int4(packed: jax.Array, scale: jax.Array, n: int,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[:-1]
+                                             + (packed.shape[-1] * 2,))
+    qp = q.astype(jnp.float32)
+    shape = qp.shape[:-1] + (qp.shape[-1] // BLOCK, BLOCK)
+    x = qp.reshape(shape) * scale[..., None]
+    return x.reshape(qp.shape)[..., :n].astype(dtype)
+
+
+def compressed_bytes(x_shape: Tuple[int, ...], bits: int) -> int:
+    n = 1
+    for s in x_shape:
+        n *= s
+    payload = n * bits // 8
+    scales = (n // BLOCK) * 4
+    return payload + scales
+
+
+def compression_error(x: jax.Array, bits: int = 8) -> float:
+    """Relative L2 reconstruction error (profiler accuracy-impact proxy)."""
+    if bits == 8:
+        q, s = quantize_int8(x)
+        y = dequantize_int8(q, s, jnp.float32)
+    else:
+        q, s = quantize_int4(x)
+        y = dequantize_int4(q, s, x.shape[-1], jnp.float32)
+    x = x.astype(jnp.float32)
+    return float(jnp.linalg.norm(x - y) / (jnp.linalg.norm(x) + 1e-9))

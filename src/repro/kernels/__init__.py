@@ -1,0 +1,8 @@
+from . import ops, ref
+from .act_quant import act_dequant, act_quant, act_quant4
+from .flash_attn import flash_attention
+from .fused_ffn import fused_ffn
+from .ssd_scan import ssd_scan
+
+__all__ = ["ops", "ref", "act_dequant", "act_quant", "act_quant4", "flash_attention",
+           "fused_ffn", "ssd_scan"]

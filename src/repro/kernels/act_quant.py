@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blockwise int8 activation quantization (engine ❼).
+
+Tiling: grid (M/bm, N/bn); each program reads a (bm, bn) activation tile
+into VMEM, computes per-128-lane-block absmax scales (bn is a multiple of
+128 so scales stay register/VMEM-local), and writes the int8 tile plus the
+f32 scales.  Quantizing on-chip right after the producing matmul keeps the
+bf16 tile from ever round-tripping to HBM — the kernel-level realization
+of the paper's "compress intermediate activations post-forward".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QBLOCK = 128
+
+
+def _act_quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)               # (bm, bn)
+    bm, bn = x.shape
+    xb = x.reshape(bm, bn // QBLOCK, QBLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -127, 127)
+    q_ref[...] = q.reshape(bm, bn).astype(jnp.int8)
+    s_ref[...] = scale[..., 0]
+
+
+def _act_dequant_kernel(q_ref, s_ref, o_ref, *, out_dtype):
+    q = q_ref[...].astype(jnp.float32)
+    bm, bn = q.shape
+    s = s_ref[...]
+    xb = q.reshape(bm, bn // QBLOCK, QBLOCK) * s[..., None]
+    o_ref[...] = xb.reshape(bm, bn).astype(out_dtype)
+
+
+def act_quant(x: jax.Array, *, block_m: int = 256, block_n: int = 512,
+              interpret: bool = False):
+    """x: (M, N), N % 128 == 0 -> (q int8 (M,N), scales f32 (M, N/128))."""
+    m, n = x.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0 and bn % QBLOCK == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _act_quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // QBLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.int8),
+            jax.ShapeDtypeStruct((m, n // QBLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def act_dequant(q: jax.Array, scales: jax.Array, *, out_dtype=jnp.bfloat16,
+                block_m: int = 256, block_n: int = 512,
+                interpret: bool = False) -> jax.Array:
+    m, n = q.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0 and bn % QBLOCK == 0
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_act_dequant_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // QBLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(q, scales)
+
+
+def _act_quant4_kernel(x_ref, q_ref, s_ref):
+    """int4 variant: two 4-bit values packed per uint8 byte."""
+    x = x_ref[...].astype(jnp.float32)               # (bm, bn)
+    bm, bn = x.shape
+    xb = x.reshape(bm, bn // QBLOCK, QBLOCK)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = amax / 7.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -7, 7) + 8.0  # bias to unsigned
+    q = q.reshape(bm, bn).astype(jnp.uint8)
+    lo, hi = q[:, 0::2], q[:, 1::2]
+    q_ref[...] = (lo | (hi << 4)).astype(jnp.uint8)
+    s_ref[...] = scale[..., 0]
+
+
+def act_quant4(x: jax.Array, *, block_m: int = 256, block_n: int = 512,
+               interpret: bool = False):
+    """Packed int4 activation quantization (engine ❼: the paper's 4-bit
+    storage path).  x: (M, N), N % 128 == 0 ->
+    (packed uint8 (M, N/2), scales f32 (M, N/128))."""
+    m, n = x.shape
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0 and bn % QBLOCK == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _act_quant4_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bm, bn // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // QBLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((m, n // QBLOCK), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,82 @@
+"""Jit'd wrappers around the Pallas kernels with automatic CPU fallback.
+
+The engine flips ``RuntimeOptions.use_pallas``; every op here dispatches to
+the Pallas kernel on TPU (or in interpret mode when forced) and to the
+``ref.py`` oracle otherwise, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .act_quant import act_dequant, act_quant
+from .flash_attn import flash_attention
+from .fused_ffn import fused_ffn
+from .ssd_scan import ssd_scan
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quantize_activations(x: jax.Array, use_pallas: bool = False,
+                         interpret: bool = False):
+    if use_pallas and (_on_tpu() or interpret):
+        return tuple(act_quant(x, interpret=not _on_tpu()))
+    return ref.act_quant_ref(x)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret",
+                                             "out_dtype"))
+def dequantize_activations(q: jax.Array, scales: jax.Array,
+                           out_dtype=jnp.bfloat16, use_pallas: bool = False,
+                           interpret: bool = False) -> jax.Array:
+    if use_pallas and (_on_tpu() or interpret):
+        return act_dequant(q, scales, out_dtype=out_dtype,
+                           interpret=not _on_tpu())
+    return ref.act_dequant_ref(q, scales, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "use_pallas",
+                                             "interpret"))
+def gated_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, activation: str = "silu",
+              use_pallas: bool = False, interpret: bool = False) -> jax.Array:
+    if use_pallas and (_on_tpu() or interpret):
+        return fused_ffn(x, w_gate, w_up, w_down, activation=activation,
+                         interpret=not _on_tpu())
+    return ref.fused_ffn_ref(x, w_gate, w_up, w_down, activation)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_pallas", "interpret"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              window: int = 0, use_pallas: bool = False,
+              interpret: bool = False) -> jax.Array:
+    """q,k,v: (B, H, S, hd) with kv already broadcast to H."""
+    b, h, s, hd = q.shape
+    if use_pallas and (_on_tpu() or interpret):
+        out = flash_attention(q.reshape(b * h, s, hd),
+                              k.reshape(b * h, s, hd),
+                              v.reshape(b * h, s, hd),
+                              causal=causal, window=window,
+                              interpret=not _on_tpu())
+        return out.reshape(b, h, s, hd)
+    return ref.flash_attn_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret"))
+def ssd(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+        c: jax.Array, chunk: int = 128, use_pallas: bool = False,
+        interpret: bool = False):
+    """Layout: (BH, S, P) / (BH, S) / (BH,) / (BH, S, N)."""
+    if use_pallas and (_on_tpu() or interpret):
+        return tuple(ssd_scan(x, dt, a, b, c, chunk=chunk,
+                              interpret=not _on_tpu()))
+    return ref.ssd_scan_kernel_ref(x, dt, a, b, c, chunk)

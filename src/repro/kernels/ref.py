@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each ``*_ref`` function is the semantic ground truth the kernels are
+allclose-validated against in interpret mode, and the CPU execution path
+when ``RuntimeOptions.use_pallas`` is off.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------- act_quant ------
+def act_quant_ref(x: jax.Array, block: int = 128
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8 quantization along the last dim.
+    x: (M, N) with N % block == 0 -> (q int8 (M,N), scales f32 (M, N/block))."""
+    m, n = x.shape
+    xb = x.reshape(m, n // block, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(m, n), scale[..., 0]
+
+
+def act_dequant_ref(q: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    m, n = q.shape
+    block = n // scale.shape[1]
+    xb = q.reshape(m, n // block, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(m, n).astype(dtype)
+
+
+# ----------------------------------------------------------- fused_ffn -----
+def fused_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array, activation: str = "silu") -> jax.Array:
+    """GeGLU/SwiGLU FFN: (act(x@wg) * (x@wu)) @ wd, f32 accumulation."""
+    act = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[activation]
+    xf = x.astype(jnp.float32)
+    h = act(xf @ w_gate.astype(jnp.float32)) * (xf @ w_up.astype(jnp.float32))
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------- flash_attn -----
+def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0) -> jax.Array:
+    """Single-head-batched attention oracle.
+    q: (B, H, S, hd); k, v: (B, H, S, hd)  (kv heads pre-broadcast)."""
+    b, h, s, hd = q.shape
+    scale = 1.0 / np.sqrt(hd)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= rows >= cols
+    if window:
+        mask &= cols > rows - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------------- ssd_scan ----
+def ssd_scan_kernel_ref(x: jax.Array, dt: jax.Array, a: jax.Array,
+                        b: jax.Array, c: jax.Array, chunk: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Per-(batch·head) SSD oracle in the kernel's layout.
+
+    x: (BH, S, P); dt: (BH, S); a: (BH,); b, c: (BH, S, N).
+    Returns (y (BH,S,P), final_state (BH,P,N))."""
+    from repro.models.ssm import ssd_scan_ref
+
+    def one(xi, dti, ai, bi, ci):
+        y, st = ssd_scan_ref(xi[None, :, None, :], dti[None, :, None],
+                             ai[None], bi[None, :, None, :],
+                             ci[None, :, None, :], chunk=chunk)
+        return y[0, :, 0, :], st[0, 0]
+
+    return jax.vmap(one)(x, dt, a, b, c)

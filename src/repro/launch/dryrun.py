@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape × mesh) combination this lowers and
+compiles the real step function against ShapeDtypeStruct inputs with the
+production shardings — no allocation, no execution — and records
+memory_analysis / cost_analysis / collective bytes for the roofline
+report (EXPERIMENTS.md §Dry-run / §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.core.profiler import (TPU_V5E, analytic_step_costs,
+                                 collective_bytes_from_hlo,
+                                 collective_bytes_scan_corrected,
+                                 model_flops_estimate, roofline_terms,
+                                 scan_trip_count)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_specs, cache_specs, opt_state_specs,
+                                   param_specs, to_shardings)
+from repro.launch.steps import (cache_spec_struct, input_specs, make_step,
+                                options_for, params_spec_struct)
+from repro.models.configs import INPUT_SHAPES
+from repro.optim import adamw
+
+from jax.sharding import PartitionSpec as P
+
+
+def build_args(cfg, shape, mesh, opts, param_mode: str = "train",
+               kv_shard: str = "heads"):
+    """(arg structs, arg shardings, out shardings, donate) for the step."""
+    pstruct = params_spec_struct(cfg)
+    pspecs = param_specs(cfg, pstruct, mode=param_mode)
+    bstruct = input_specs(cfg, shape, opts)
+    bspecs = batch_specs(cfg, mesh, shape, decode=shape.is_decode)
+    bspecs = {k: bspecs.get(k, P()) for k in bstruct}
+    if shape.kind == "train":
+        ostruct = jax.eval_shape(adamw.init, pstruct)
+        ospecs = opt_state_specs(cfg, ostruct, pspecs)
+        structs = (pstruct, ostruct, bstruct)
+        in_specs = (pspecs, ospecs, bspecs)
+        out_specs = (pspecs, ospecs, {"loss": P(), "grad_norm": P()})
+        donate = (0, 1)
+    else:
+        cstruct = cache_spec_struct(cfg, shape, opts)
+        cspecs = cache_specs(cfg, cstruct, mesh, shape, kv_shard=kv_shard)
+        structs = (pstruct, cstruct, bstruct)
+        in_specs = (pspecs, cspecs, bspecs)
+        if shape.is_decode:
+            logits_spec = P(bspecs["token"][0], "model")
+        else:
+            logits_spec = P(bspecs["tokens"][0], None, "model")
+        out_specs = (logits_spec, cspecs)
+        donate = (1,)
+    return structs, in_specs, out_specs, donate
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: Path, verbose: bool = True,
+            opt_overrides: dict | None = None, param_mode: str = "train",
+            tag: str = "", param_dtype: str = "", kv_shard: str = "heads"
+            ) -> dict:
+    cfg = get_config(arch)
+    if param_dtype:
+        cfg = cfg.with_updates(param_dtype=param_dtype)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    opts = options_for(cfg, shape, opt_overrides)
+    step = make_step(cfg, shape, opts)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+           "kind": shape.kind, "status": "ok", "param_mode": param_mode,
+           "tag": tag, "opt_overrides": opt_overrides or {}}
+    t0 = time.time()
+    try:
+        structs, in_specs, out_specs, donate = build_args(
+            cfg, shape, mesh, opts, param_mode=param_mode,
+            kv_shard=kv_shard)
+        with mesh:
+            jitted = jax.jit(step,
+                             in_shardings=to_shardings(in_specs, mesh),
+                             out_shardings=to_shardings(out_specs, mesh),
+                             donate_argnums=donate)
+            lowered = jitted.lower(*structs)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not support it
+            rec["memory_analysis"] = {"error": str(e)[:200]}
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            rec["cost_analysis"] = {
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed",
+                                               ca.get("bytes_accessed", 0.0))),
+            }
+        except Exception as e:
+            rec["cost_analysis"] = {"error": str(e)[:200]}
+
+        trips = scan_trip_count(cfg)
+        try:
+            hlo = compiled.as_text()
+            coll_raw = collective_bytes_from_hlo(hlo)
+            coll = collective_bytes_scan_corrected(hlo, trips)
+            rec["collective_bytes_raw"] = coll_raw
+            rec["collective_bytes"] = coll
+            rec["collective_total"] = float(sum(coll.values()))
+            rec["hlo_lines"] = hlo.count("\n")
+        except Exception as e:
+            rec["collective_bytes"] = {"error": str(e)[:200]}
+            rec["collective_total"] = 0.0
+
+        # Roofline terms.  XLA CPU cost_analysis counts while bodies ONCE
+        # (verified empirically), so the compute/memory terms come from the
+        # scan-exact analytic model; collectives come from the compiled HLO
+        # with while-body trip correction.  Raw HLO numbers are recorded
+        # alongside for reference.
+        kv_b = 1 if opts.kv_cache_dtype == "fp8" else 2
+        a_flops, a_bytes = analytic_step_costs(
+            cfg, shape, remat=opts.remat, kv_bytes=kv_b,
+            decode_window=opts.decode_window)
+        coll_b = rec.get("collective_total", 0.0)
+        mflops = model_flops_estimate(cfg, shape)
+        rt = roofline_terms(hlo_flops=a_flops, hlo_bytes=a_bytes,
+                            collective_bytes=coll_b * chips, chips=chips,
+                            model_flops=mflops, hw=TPU_V5E)
+        rec["analytic"] = {"flops": a_flops, "bytes": a_bytes,
+                           "scan_trips": trips}
+        rec["roofline"] = {
+            "compute_s": rt.compute_s, "memory_s": rt.memory_s,
+            "collective_s": rt.collective_s, "dominant": rt.dominant,
+            "model_flops": mflops,
+            "useful_compute_ratio": rt.useful_compute_ratio,
+        }
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    fn = out_dir / (f"{arch.replace('.', '_')}__{shape_name}"
+                    f"__{rec['mesh']}{suffix}.json")
+    fn.write_text(json.dumps(rec, indent=2, default=str))
+    if verbose:
+        r = rec.get("roofline", {})
+        print(f"[{rec['status']}] {arch} × {shape_name} × {rec['mesh']}  "
+              f"lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s "
+              f"dominant={r.get('dominant')} "
+              f"terms=({r.get('compute_s', 0):.3e},{r.get('memory_s', 0):.3e},"
+              f"{r.get('collective_s', 0):.3e})s", flush=True)
+        if rec["status"] == "FAIL":
+            print(rec["error"], flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--param-mode", default="train",
+                    choices=["train", "serve"])
+    ap.add_argument("--param-dtype", default="")
+    ap.add_argument("--kv-shard", default="heads",
+                    choices=["heads", "seq"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", action="append", default=[],
+                    help="RuntimeOptions override key=value (repeatable)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            pass
+        overrides[k] = v
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    out = Path(args.out)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_one(arch, shape, mp, out,
+                              opt_overrides=overrides or None,
+                              param_mode=args.param_mode, tag=args.tag,
+                              param_dtype=args.param_dtype,
+                              kv_shard=args.kv_shard)
+                failures += rec["status"] != "ok"
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Adaptive serving driver: batched requests through the ServingEngine
+with the CrowdHMTware loop swapping variants as the context trace evolves.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 24 --slots 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Budgets, Middleware, ResourceContext, case_study_trace
+from repro.models.configs import InputShape
+from repro.models.model import init_params
+from repro.serving import Request, ServingEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="paper-backbone")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--adapt-every", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    shape = InputShape("serve", args.max_seq, args.slots, "decode")
+    mw = Middleware(cfg=cfg, params=params, shape=shape,
+                    budgets=Budgets(latency_s=1.0, memory_bytes=8e9),
+                    allow_offload=False)
+    engine = ServingEngine(cfg, params, slots=args.slots,
+                           max_seq=args.max_seq)
+
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=rng.integers(8, 48)).astype(np.int32)
+        engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=12))
+
+    trace = list(case_study_trace(max(args.requests // args.adapt_every, 2)))
+    ti = 0
+    t0 = time.time()
+    step = 0
+    while any(engine._active) or engine._queue:
+        engine.step()
+        step += 1
+        if step % args.adapt_every == 0 and ti < len(trace):
+            d = mw.adapt(trace[ti])
+            ti += 1
+            vcfg, vparams, vopts = mw.current_runtime()
+            if vcfg != engine.cfg or vopts != engine.opts:
+                print(f"[adapt] {d.reason}: {d.action.describe()[:80]}")
+                engine.swap_model(vcfg, vparams, vopts)
+    dt = time.time() - t0
+    s = engine.stats
+    print(f"served {args.requests} requests in {dt:.1f}s — "
+          f"{s.steps} steps, {s.tokens_out} tokens "
+          f"({s.tokens_per_step:.2f} tok/step), {s.prefills} prefills, "
+          f"{s.recompiles} recompiles, {engine.generation} variant swaps")
+    print(mw.report())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules (MaxText-style) for every parameter, cache
+and batch tensor, for both mesh topologies.
+
+Weight matmul dims shard on the FUSED projection axes (q_dim, kv_dim,
+d_ff, packed mamba in_proj) which every assigned architecture keeps
+divisible by the 16-way model axis — head-count axes (40, 56, 8 heads…)
+are NOT divisible, so activations keep heads unsharded at the jit
+boundary and GSPMD propagates internal shardings from the weights.
+Weights additionally FSDP over "data"; the "pod" axis is pure DP.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models.configs import InputShape, ModelConfig
+
+from .mesh import batch_axes
+
+Params = Any
+
+FSDP = "data"
+TP = "model"
+
+
+def _right_align(spec: Tuple, ndim: int) -> P:
+    """Pad a trailing-dims spec with leading Nones (stacked-layer dims)."""
+    pad = ndim - len(spec)
+    return P(*([None] * pad + list(spec)))
+
+
+_REPLICATED = ("ln", "ln1", "ln2", "ln_cross", "final_norm", "encoder_norm",
+               "norm_scale", "a_log", "d_skip", "dt_bias", "norms")
+
+
+def leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+              cfg: ModelConfig, mode: str = "train") -> P:
+    """mode="serve": weights replicate over the FSDP axis (no per-layer
+    all-gathers at decode; TP/EP shards alone must fit HBM — they do for
+    every assigned arch in bf16)."""
+    name = path[-1]
+    nd = len(shape)
+    in_moe = "moe" in path
+    if name in _REPLICATED or nd == 0:
+        return P()
+    if name == "embed":
+        return P(TP, FSDP)
+    if name in ("wq", "wk", "wv"):
+        return _right_align((FSDP, TP), nd)
+    if name == "wo":
+        return _right_align((TP, FSDP), nd)
+    if name in ("bq", "bk", "bv"):
+        return _right_align((TP,), nd)
+    if name in ("w_gate", "w_up"):
+        if in_moe and nd >= 3 and shape[-3] == cfg.num_experts:
+            if cfg.num_experts % 16 == 0:
+                return _right_align((TP, None, None), nd)  # expert parallel
+            return _right_align((None, None, TP), nd)      # E<16: TP on d_ff
+        return _right_align((FSDP, TP), nd)
+    if name == "w_down":
+        if in_moe and nd >= 3 and shape[-3] == cfg.num_experts:
+            if cfg.num_experts % 16 == 0:
+                return _right_align((TP, None, None), nd)
+            return _right_align((None, TP, None), nd)
+        return _right_align((TP, FSDP), nd)
+    if name == "router":
+        return _right_align((FSDP, None), nd)
+    if name == "in_proj":
+        return _right_align((FSDP, TP), nd)
+    if name == "out_proj":
+        return _right_align((TP, FSDP), nd)
+    if name == "conv_w":
+        return _right_align((TP, None), nd)
+    if name == "conv_b":
+        return _right_align((TP,), nd)
+    if name == "w" and "vision_proj" in path:
+        return P(FSDP, None)
+    return P()  # safe default: replicate
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        out.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return tuple(out)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Params,
+                mode: str = "train") -> Params:
+    """PartitionSpec tree matching an eval_shape'd param tree."""
+    def spec(kp, leaf):
+        s = leaf_spec(_path_names(kp), leaf.shape, cfg)
+        if mode == "serve":
+            s = P(*[None if ax == FSDP else ax for ax in s])
+        return s
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_shape, pspecs) -> Any:
+    """AdamW m/v mirror the parameter specs; step is replicated."""
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=P(), m=pspecs, v=pspecs)
+
+
+# ------------------------------------------------------------- caches ------
+def _tp_axis_for(dim: int, mesh) -> Optional[str]:
+    size = mesh.shape.get(TP, 1)
+    return TP if dim % size == 0 else None
+
+
+def cache_specs(cfg: ModelConfig, cache_shape: Dict[str, Any], mesh,
+                shape: InputShape, kv_shard: str = "heads") -> Dict[str, Any]:
+    """KV/SSM cache shardings.
+
+    decode_32k: batch -> (pod,)data, kv heads -> model when divisible,
+                else head_dim -> model.
+    long_500k (batch=1): cache *sequence* -> (pod+)data (context
+                parallelism), heads as above."""
+    b_axes = batch_axes(mesh)
+    specs: Dict[str, Any] = {}
+    total = 1
+    for a in b_axes:
+        total *= mesh.shape[a]
+    batch_shardable = (shape.global_batch % total == 0
+                       and shape.global_batch >= total)
+    seq_parallel = not batch_shardable
+    for key, leaf in cache_shape.items():
+        nd = len(leaf.shape)
+        if key == "pos":
+            specs[key] = P()
+        elif key in ("k", "v", "shared_k", "shared_v", "cross_k", "cross_v"):
+            # (L, B, S, K, hd)
+            kdim, hdim = leaf.shape[3], leaf.shape[4]
+            kv_ax = _tp_axis_for(kdim, mesh)
+            hd_ax = _tp_axis_for(hdim, mesh) if kv_ax is None else None
+            if kv_shard == "seq" and key not in ("cross_k", "cross_v") \
+                    and not seq_parallel:
+                # §Perf: split-KV (flash-decoding style) — the cache SEQ dim
+                # shards over "model"; attention reduces over seq shards via
+                # small softmax-stat collectives instead of gathering KV
+                specs[key] = P(None, b_axes, TP, None, None)
+                continue
+            if seq_parallel and key not in ("cross_k", "cross_v"):
+                specs[key] = P(None, None, b_axes, kv_ax, hd_ax)
+            elif seq_parallel:
+                # cross-attn cache: fixed encoder length, unshardable batch
+                specs[key] = P(None, None, None, kv_ax, hd_ax)
+            else:
+                specs[key] = P(None, b_axes, None, kv_ax, hd_ax)
+        elif key == "ssm":
+            # (L, B, H, P, N)
+            h_ax = _tp_axis_for(leaf.shape[2], mesh)
+            specs[key] = P(None, None if seq_parallel else b_axes, h_ax,
+                           None, None)
+        elif key == "conv":
+            # (L, B, W-1, C)
+            c_ax = _tp_axis_for(leaf.shape[3], mesh)
+            specs[key] = P(None, None if seq_parallel else b_axes, None, c_ax)
+        else:
+            specs[key] = P()
+    return specs
+
+
+# -------------------------------------------------------------- batches ----
+def batch_specs(cfg: ModelConfig, mesh, shape: InputShape,
+                decode: bool = False) -> Dict[str, P]:
+    b_axes = batch_axes(mesh)
+    total = 1
+    for a in b_axes:
+        total *= mesh.shape[a]
+    b_spec = b_axes if shape.global_batch % total == 0 and \
+        shape.global_batch >= total else None
+    out: Dict[str, P] = {}
+    if decode:
+        out["token"] = P(b_spec)
+    else:
+        out["tokens"] = P(b_spec, None)
+        out["labels"] = P(b_spec, None)
+    if cfg.is_encoder_decoder:
+        out["encoder_frames"] = P(b_spec, None, None)
+    if cfg.vision_embed_dim:
+        out["vision_embeds"] = P(b_spec, None, None)
+    return out
+
+
+def to_shardings(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,123 @@
+"""Jit-able train / prefill / serve steps + ShapeDtypeStruct input specs.
+
+These are the four functions the dry-run lowers for every (architecture ×
+input shape × mesh) combination, and the same functions the real train.py
+/ serve.py drivers execute on CPU-scale configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import InputShape, ModelConfig
+from repro.models.layers import Params
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, lm_loss, prefill)
+from repro.models.runtime import RuntimeOptions
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+
+
+def options_for(cfg: ModelConfig, shape: InputShape,
+                overrides: Optional[Dict[str, Any]] = None) -> RuntimeOptions:
+    """Engine defaults per workload (the middleware's θ_s baseline)."""
+    kw: Dict[str, Any] = {}
+    if shape.kind == "train":
+        kw.update(remat="full", attn_impl="auto", q_chunk=512, k_chunk=1024)
+    elif shape.kind == "prefill":
+        kw.update(remat="none", attn_impl="auto", q_chunk=512, k_chunk=1024)
+    else:  # decode
+        kw.update(remat="none")
+        if shape.seq_len > 100_000:
+            # long_500k: sub-quadratic decode — engine-selected sliding
+            # window (SSM/hybrid are O(1) anyway; their shared/local
+            # attention blocks adopt the same window)
+            kw.update(decode_window=8192)
+    kw.update(overrides or {})
+    return RuntimeOptions(**kw)
+
+
+# ------------------------------------------------------------ input specs --
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                opts: Optional[RuntimeOptions] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+    shardable, no device allocation."""
+    opts = opts or options_for(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        specs["token"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    if cfg.is_encoder_decoder and shape.kind != "decode":
+        specs["encoder_frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_embed_dim and shape.kind != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_vision_tokens, cfg.vision_embed_dim), jnp.bfloat16)
+    return specs
+
+
+def cache_spec_struct(cfg: ModelConfig, shape: InputShape,
+                      opts: RuntimeOptions) -> Dict[str, Any]:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, opts))
+
+
+def params_spec_struct(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ------------------------------------------------------------- the steps ---
+def make_train_step(cfg: ModelConfig, opts: RuntimeOptions,
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()
+                    ) -> Callable:
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            logits, aux = forward(
+                p, cfg, batch["tokens"], opts,
+                encoder_frames=batch.get("encoder_frames"),
+                vision_embeds=batch.get("vision_embeds"))
+            return (lm_loss(logits, batch["labels"])
+                    + cfg.router_aux_weight * aux)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        lr = warmup_cosine(opt_state.step)
+        new_params, new_state = adamw.apply(grads, params, opt_state,
+                                            opt_cfg, lr_scale=lr)
+        metrics = {"loss": loss, "grad_norm": adamw.global_norm(grads)}
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, opts: RuntimeOptions) -> Callable:
+    def prefill_step(params, cache, batch):
+        logits, cache = prefill(
+            params, cfg, batch["tokens"], cache, opts,
+            encoder_frames=batch.get("encoder_frames"),
+            vision_embeds=batch.get("vision_embeds"))
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, opts: RuntimeOptions) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, cache = decode_step(params, cfg, cache, batch["token"], opts)
+        return logits, cache
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape: InputShape,
+              opts: Optional[RuntimeOptions] = None) -> Callable:
+    opts = opts or options_for(cfg, shape)
+    if shape.kind == "train":
+        return make_train_step(cfg, opts)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, opts)
+    return make_serve_step(cfg, opts)

@@ -1,0 +1,14 @@
+from .configs import (ATTN, INPUT_SHAPES, LOCAL, MAMBA, SHARED_ATTN,
+                      DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+                      InputShape, ModelConfig, tokens_per_step)
+from .model import (Cache, decode_step, forward, init_cache, init_params,
+                    lm_loss, prefill)
+from .runtime import DEFAULT_OPTIONS, RuntimeOptions
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "tokens_per_step", "Cache", "decode_step",
+    "forward", "init_cache", "init_params", "lm_loss", "prefill",
+    "RuntimeOptions", "DEFAULT_OPTIONS", "ATTN", "LOCAL", "MAMBA",
+    "SHARED_ATTN",
+]

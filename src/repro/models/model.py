@@ -1,0 +1,447 @@
+"""Unified model API: init / forward / prefill / decode_step.
+
+Every architecture family exposes the same four entry points; the launcher,
+serving runtime and middleware only talk to these.  Decode carries an
+explicit cache pytree (attention KV, SSM state, conv state, cross-attn KV)
+that is threaded through ``lax.scan`` over the stacked layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .configs import ATTN, LOCAL, MAMBA, ModelConfig
+from .layers import (Params, dtype_of, embed_lookup, ffn_apply, matmul_w,
+                     rms_norm, unembed)
+from .runtime import DEFAULT_OPTIONS, RuntimeOptions
+from .transformer import (_pattern_period, apply_stack, forward, init_params,
+                          lm_loss)
+
+Cache = Dict[str, Any]
+
+__all__ = ["init_params", "forward", "lm_loss", "init_cache", "prefill",
+           "decode_step", "Cache"]
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return 0
+    return cfg.num_layers
+
+
+def _n_shared_sites(cfg: ModelConfig) -> int:
+    if cfg.arch_type != "hybrid":
+        return 0
+    return cfg.num_layers // (cfg.shared_attn_period or cfg.num_layers)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
+    kv_dt = dtype_of(opts.kv_cache_dtype)
+    hd = cfg.resolved_head_dim
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    n_attn = _n_attn_layers(cfg)
+    if n_attn:
+        shape = (n_attn, batch, max_seq, cfg.num_kv_heads, hd)
+        cache["k"] = jnp.zeros(shape, kv_dt)
+        cache["v"] = jnp.zeros(shape, kv_dt)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        st, cv = ssm_mod.mamba_state_shapes(cfg, batch)
+        cache["ssm"] = jnp.zeros((cfg.num_layers,) + st, jnp.float32)
+        cache["conv"] = jnp.zeros((cfg.num_layers,) + cv, kv_dt)
+    ns = _n_shared_sites(cfg)
+    if ns:
+        shape = (ns, batch, max_seq, cfg.num_kv_heads, hd)
+        cache["shared_k"] = jnp.zeros(shape, kv_dt)
+        cache["shared_v"] = jnp.zeros(shape, kv_dt)
+    if cfg.is_encoder_decoder:
+        shape = (cfg.num_layers, batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd)
+        cache["cross_k"] = jnp.zeros(shape, kv_dt)
+        cache["cross_v"] = jnp.zeros(shape, kv_dt)
+    return cache
+
+
+# =========================================================== decode blocks ==
+def _decode_rotary(pos: jax.Array, head_dim: int, theta: float):
+    from .layers import rotary_embedding
+    return rotary_embedding(pos[None, None], head_dim, theta)  # (1,1,half)
+
+
+def _apply_rot1(x: jax.Array, sin, cos):
+    """x: (B, H, hd) one-token rotary."""
+    from .layers import apply_rotary
+    return apply_rotary(x[:, None], sin, cos)[:, 0]
+
+
+def _attn_decode(layer: Params, x: jax.Array, k_cache, v_cache, pos,
+                 cfg: ModelConfig, opts: RuntimeOptions, *, window: int,
+                 cross_kv=None):
+    """One-token attention block.  x: (B, D)."""
+    b, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    a = layer["attn"]
+    q = matmul_w(h, a["wq"]).reshape(b, cfg.num_heads, hd)
+    k = matmul_w(h, a["wk"]).reshape(b, cfg.num_kv_heads, hd)
+    v = matmul_w(h, a["wv"]).reshape(b, cfg.num_kv_heads, hd)
+    if "bq" in a:
+        q = q + a["bq"].reshape(cfg.num_heads, hd)
+        k = k + a["bk"].reshape(cfg.num_kv_heads, hd)
+        v = v + a["bv"].reshape(cfg.num_kv_heads, hd)
+    sin, cos = _decode_rotary(pos, hd, cfg.rope_theta)
+    q = _apply_rot1(q, sin, cos)
+    k = _apply_rot1(k, sin, cos)
+    k_cache, v_cache = attn_mod.update_kv_cache(k_cache, v_cache, k, v, pos)
+    w = window or opts.decode_window
+    out = attn_mod.decode_attention(q, k_cache, v_cache, pos, window=w)
+    x = x + matmul_w(out.reshape(b, cfg.num_heads * hd), a["wo"]).astype(x.dtype)
+
+    if cross_kv is not None and "cross" in layer:
+        hq = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+        c = layer["cross"]
+        qc = (hq @ c["wq"]).reshape(b, cfg.num_heads, hd)
+        ck, cv = cross_kv
+        # non-causal attention over the fixed encoder output
+        out = attn_mod.decode_attention(qc, ck.astype(x.dtype),
+                                        cv.astype(x.dtype),
+                                        jnp.int32(ck.shape[1] - 1), window=0)
+        x = x + (out.reshape(b, cfg.num_heads * hd) @ c["wo"]).astype(x.dtype)
+
+    h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        y = moe_mod.moe_apply_decode(layer["moe"], h2, cfg)
+    else:
+        y = ffn_apply(layer["ffn"], h2, gated=cfg.gated_ffn,
+                      activation=cfg.activation)
+    return x + y.astype(x.dtype), k_cache, v_cache
+
+
+def _mamba_decode(layer: Params, x: jax.Array, ssm_state, conv_state,
+                  cfg: ModelConfig):
+    h = rms_norm(x, layer["ln"], cfg.norm_eps)
+    y, ssm_state, conv_state = ssm_mod.mamba_step(
+        layer["mamba"], h, ssm_state, conv_state.astype(h.dtype), cfg)
+    return x + y.astype(x.dtype), ssm_state, conv_state
+
+
+# ================================================================= decode ==
+def decode_step(params: Params, cfg: ModelConfig, cache: Cache,
+                token: jax.Array, opts: RuntimeOptions = DEFAULT_OPTIONS
+                ) -> Tuple[jax.Array, Cache]:
+    """Generate logits for ONE new token per sequence.
+
+    token: (B,) int32.  Returns (logits (B, vocab), updated cache).
+    """
+    from .layers import cast_params
+    act_dt = dtype_of(cfg.activation_dtype)
+    params = cast_params(params, act_dt)
+    x = embed_lookup(params["embed"], token).astype(act_dt)  # (B, D)
+    pos = cache["pos"]
+    kinds, shared_after = _pattern_period(cfg)
+    period = len(kinds)
+    new_cache = dict(cache)
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        n = cfg.num_layers
+        n_full = (n // period) * period
+
+        has_shared = shared_after and "shared_attn" in params \
+            and "shared_k" in cache
+
+        def period_step(carry, xs):
+            x = carry
+            if has_shared:
+                layer_pp, ssm_pp, conv_pp, sk, sv = xs
+            else:
+                layer_pp, ssm_pp, conv_pp = xs
+                sk = sv = None
+            new_ssm, new_conv = [], []
+            for j in range(period):
+                layer = jax.tree_util.tree_map(lambda a: a[j], layer_pp)
+                x, s1, c1 = _mamba_decode(layer, x, ssm_pp[j], conv_pp[j], cfg)
+                new_ssm.append(s1)
+                new_conv.append(c1)
+            ys = (jnp.stack(new_ssm), jnp.stack(new_conv))
+            if has_shared:
+                x, sk, sv = _attn_decode(params["shared_attn"], x, sk, sv,
+                                         pos, cfg, opts, window=0)
+                ys = ys + (sk, sv)
+            return x, ys
+
+        if n_full:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[:n_full].reshape(n_full // period, period,
+                                             *a.shape[1:]), params["layers"])
+            ssm_g = cache["ssm"][:n_full].reshape(n_full // period, period,
+                                                  *cache["ssm"].shape[1:])
+            conv_g = cache["conv"][:n_full].reshape(n_full // period, period,
+                                                    *cache["conv"].shape[1:])
+            xs = (grouped, ssm_g, conv_g)
+            if has_shared:
+                xs = xs + (cache["shared_k"], cache["shared_v"])
+            x, ys = jax.lax.scan(period_step, x, xs)
+            ssm_o, conv_o = ys[0], ys[1]
+            new_cache["ssm"] = new_cache["ssm"].at[:n_full].set(
+                ssm_o.reshape(n_full, *ssm_o.shape[2:]))
+            new_cache["conv"] = new_cache["conv"].at[:n_full].set(
+                conv_o.reshape(n_full, *conv_o.shape[2:])
+                .astype(new_cache["conv"].dtype))
+            if has_shared:
+                new_cache["shared_k"], new_cache["shared_v"] = ys[2], ys[3]
+        for j in range(n_full, n):
+            layer = jax.tree_util.tree_map(lambda a: a[j], params["layers"])
+            x, s1, c1 = _mamba_decode(layer, x, cache["ssm"][j],
+                                      cache["conv"][j], cfg)
+            new_cache["ssm"] = new_cache["ssm"].at[j].set(s1)
+            new_cache["conv"] = new_cache["conv"].at[j].set(
+                c1.astype(new_cache["conv"].dtype))
+    else:
+        # attention stacks (dense / moe / local-global / enc-dec / vlm)
+        cross = None
+        has_cross = cfg.is_encoder_decoder
+
+        def layer_step(carry, xs):
+            x = carry
+            if has_cross:
+                layer_pp, kc, vc, ck, cv = xs
+            else:
+                layer_pp, kc, vc = xs
+                ck = cv = None
+            new_k, new_v = [], []
+            for j, kind in enumerate(kinds):
+                layer = jax.tree_util.tree_map(lambda a: a[j], layer_pp)
+                w = cfg.sliding_window if kind == LOCAL else 0
+                ckv = (ck[j], cv[j]) if has_cross else None
+                x, k1, v1 = _attn_decode(layer, x, kc[j], vc[j], pos, cfg,
+                                         opts, window=w, cross_kv=ckv)
+                new_k.append(k1)
+                new_v.append(v1)
+            return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+        n = cfg.num_layers
+        n_full = (n // period) * period
+        if n_full:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[:n_full].reshape(n_full // period, period,
+                                             *a.shape[1:]), params["layers"])
+            kg = cache["k"][:n_full].reshape(n_full // period, period,
+                                             *cache["k"].shape[1:])
+            vg = cache["v"][:n_full].reshape(n_full // period, period,
+                                             *cache["v"].shape[1:])
+            xs = (grouped, kg, vg)
+            if has_cross:
+                ckg = cache["cross_k"][:n_full].reshape(
+                    n_full // period, period, *cache["cross_k"].shape[1:])
+                cvg = cache["cross_v"][:n_full].reshape(
+                    n_full // period, period, *cache["cross_v"].shape[1:])
+                xs = (grouped, kg, vg, ckg, cvg)
+            x, (k_o, v_o) = jax.lax.scan(layer_step, x, xs)
+            new_cache["k"] = k_o.reshape(n_full, *k_o.shape[2:])
+            new_cache["v"] = v_o.reshape(n_full, *v_o.shape[2:])
+        for j in range(n_full, n):
+            layer = jax.tree_util.tree_map(lambda a: a[j], params["layers"])
+            kind = kinds[(j - n_full) % period]
+            w = cfg.sliding_window if kind == LOCAL else 0
+            ckv = ((cache["cross_k"][j], cache["cross_v"][j])
+                   if has_cross else None)
+            x, k1, v1 = _attn_decode(layer, x, cache["k"][j], cache["v"][j],
+                                     pos, cfg, opts, window=w, cross_kv=ckv)
+            new_cache["k"] = new_cache["k"].at[j].set(k1)
+            new_cache["v"] = new_cache["v"].at[j].set(v1)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    from .layers import mask_padded_logits_raw
+    logits = mask_padded_logits_raw(logits, cfg.vocab_size)
+    new_cache["pos"] = pos + 1
+    return logits, new_cache
+
+
+# ================================================================ prefill ==
+def prefill(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            cache: Cache, opts: RuntimeOptions = DEFAULT_OPTIONS, *,
+            encoder_frames: Optional[jax.Array] = None,
+            vision_embeds: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Cache]:
+    """Process a prompt, filling the cache.  Returns (logits, cache).
+
+    A single scanned walk over the stacked layers computes activations AND
+    captures per-layer cache entries (attention K/V, SSM final state, conv
+    tail, cross-attn K/V) as scan outputs.
+    """
+    from .layers import cast_params
+    act_dt = dtype_of(cfg.activation_dtype)
+    params = cast_params(params, act_dt)
+    x = embed_lookup(params["embed"], tokens).astype(act_dt)
+    if cfg.vision_embed_dim and vision_embeds is not None:
+        v = (vision_embeds.astype(act_dt) @ params["vision_proj"]["w"]
+             + params["vision_proj"]["b"]).astype(act_dt)
+        # vision embeddings occupy the first n_vis positions; the token ids
+        # at those positions are placeholders (paper: modality frontend stub)
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    new_cache = dict(cache)
+    b, s = x.shape[0], x.shape[1]
+    if "k" in cache:
+        max_seq = cache["k"].shape[2]
+    elif "shared_k" in cache:
+        max_seq = cache["shared_k"].shape[2]
+    else:
+        max_seq = s
+    hd = cfg.resolved_head_dim
+
+    cross_src = None
+    if cfg.is_encoder_decoder and encoder_frames is not None:
+        enc = encoder_frames.astype(act_dt)
+        enc, _ = apply_stack(params["encoder"], enc, cfg,
+                             opts.replace(attn_impl="full"), causal=False)
+        cross_src = rms_norm(enc, params["encoder_norm"], cfg.norm_eps)
+
+    kinds, shared_after = _pattern_period(cfg)
+    period = len(kinds)
+    n = cfg.num_layers
+    n_full = (n // period) * period
+    kv_dt = dtype_of(opts.kv_cache_dtype)
+
+    def pad_kv(kk):
+        return jnp.pad(kk.astype(kv_dt),
+                       ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+
+    if cfg.arch_type in ("ssm", "hybrid"):
+        def period_body(x, layer_pp):
+            sts, cvs = [], []
+            for j in range(period):
+                layer = jax.tree_util.tree_map(lambda a: a[j], layer_pp)
+                h = rms_norm(x, layer["ln"], cfg.norm_eps)
+                y, st, cv = _mamba_prefill_states(layer["mamba"], h, cfg)
+                x = x + y.astype(x.dtype)
+                sts.append(st)
+                cvs.append(cv.astype(kv_dt))
+            shared_kv = None
+            if shared_after and "shared_attn" in params:
+                x, kk, vv = _attn_prefill_kv(params["shared_attn"], x, cfg,
+                                             opts, window=0)
+                shared_kv = (pad_kv(kk), pad_kv(vv))
+            return x, (jnp.stack(sts), jnp.stack(cvs), shared_kv)
+
+        if n_full:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[:n_full].reshape(n_full // period, period,
+                                             *a.shape[1:]), params["layers"])
+
+            def scan_body(x, pp):
+                x, (sts, cvs, skv) = period_body(x, pp)
+                ys = (sts, cvs) + ((skv[0], skv[1]) if skv is not None else ())
+                return x, ys
+
+            x, ys = jax.lax.scan(scan_body, x, grouped)
+            sts, cvs = ys[0], ys[1]
+            new_cache["ssm"] = new_cache["ssm"].at[:n_full].set(
+                sts.reshape(n_full, *sts.shape[2:]))
+            new_cache["conv"] = new_cache["conv"].at[:n_full].set(
+                cvs.reshape(n_full, *cvs.shape[2:]))
+            if len(ys) > 2:
+                new_cache["shared_k"], new_cache["shared_v"] = ys[2], ys[3]
+        for j in range(n_full, n):
+            layer = jax.tree_util.tree_map(lambda a: a[j], params["layers"])
+            h = rms_norm(x, layer["ln"], cfg.norm_eps)
+            y, st, cv = _mamba_prefill_states(layer["mamba"], h, cfg)
+            x = x + y.astype(x.dtype)
+            new_cache["ssm"] = new_cache["ssm"].at[j].set(st)
+            new_cache["conv"] = new_cache["conv"].at[j].set(cv.astype(kv_dt))
+    else:
+        has_cross = cfg.is_encoder_decoder and cross_src is not None
+
+        def period_body(x, layer_pp):
+            kks, vvs, cks, cvs = [], [], [], []
+            for j, kind in enumerate(kinds):
+                layer = jax.tree_util.tree_map(lambda a: a[j], layer_pp)
+                w = cfg.sliding_window if kind == LOCAL else 0
+                x, kk, vv = _attn_prefill_kv(layer, x, cfg, opts, window=w,
+                                             cross_src=cross_src)
+                kks.append(pad_kv(kk))
+                vvs.append(pad_kv(vv))
+                if has_cross:
+                    c = layer["cross"]
+                    se = cross_src.shape[1]
+                    cks.append((cross_src @ c["wk"]).reshape(
+                        b, se, cfg.num_kv_heads, hd).astype(kv_dt))
+                    cvs.append((cross_src @ c["wv"]).reshape(
+                        b, se, cfg.num_kv_heads, hd).astype(kv_dt))
+            ys = (jnp.stack(kks), jnp.stack(vvs))
+            if has_cross:
+                ys = ys + (jnp.stack(cks), jnp.stack(cvs))
+            return x, ys
+
+        if n_full:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[:n_full].reshape(n_full // period, period,
+                                             *a.shape[1:]), params["layers"])
+            x, ys = jax.lax.scan(period_body, x, grouped)
+            new_cache["k"] = ys[0].reshape(n_full, *ys[0].shape[2:])
+            new_cache["v"] = ys[1].reshape(n_full, *ys[1].shape[2:])
+            if has_cross:
+                new_cache["cross_k"] = ys[2].reshape(n_full, *ys[2].shape[2:])
+                new_cache["cross_v"] = ys[3].reshape(n_full, *ys[3].shape[2:])
+        for j in range(n_full, n):
+            layer = jax.tree_util.tree_map(lambda a: a[j], params["layers"])
+            kind = kinds[(j - n_full) % period]
+            w = cfg.sliding_window if kind == LOCAL else 0
+            x, kk, vv = _attn_prefill_kv(layer, x, cfg, opts, window=w,
+                                         cross_src=cross_src)
+            new_cache["k"] = new_cache["k"].at[j].set(pad_kv(kk))
+            new_cache["v"] = new_cache["v"].at[j].set(pad_kv(vv))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    from .layers import mask_padded_logits_raw
+    logits = mask_padded_logits_raw(logits, cfg.vocab_size)
+    new_cache["pos"] = jnp.int32(s)
+    return logits, new_cache
+
+
+def _attn_prefill_kv(layer, x, cfg, opts, window: int = 0, cross_src=None):
+    """Run a transformer block, returning (x, K, V) of the self-attention."""
+    from .layers import apply_rotary, rotary_embedding
+    from .transformer import transformer_block
+
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    q, k, v = attn_mod.qkv_project(layer["attn"], h, cfg.num_heads,
+                                   cfg.num_kv_heads, hd)
+    sin, cos = rotary_embedding(jnp.arange(s)[None, :], hd, cfg.rope_theta)
+    k_rot = apply_rotary(k, sin, cos)
+    x, _ = transformer_block(layer, x, cfg, opts, window=window,
+                             causal=True, cross_src=cross_src)
+    return x, k_rot, v
+
+
+def _mamba_prefill_states(mp, h, cfg):
+    """Mamba block forward that also returns (final ssm state, conv state)."""
+    bsz, s, _ = h.shape
+    di, nh, hdim = cfg.ssm_d_inner, cfg.ssm_num_heads, cfg.ssm_head_dim
+    gr, st = cfg.ssm_ngroups, cfg.ssm_state_dim
+    from .layers import causal_conv1d, gated_rms_norm
+    proj = h @ mp["in_proj"]
+    z = proj[..., :di]
+    xbc_pre = proj[..., di:di + cfg.ssm_conv_dim]
+    dt = proj[..., di + cfg.ssm_conv_dim:]
+    conv_state = xbc_pre[:, -(cfg.ssm_conv_width - 1):, :]
+    xbc = jax.nn.silu(causal_conv1d(xbc_pre, mp["conv_w"], mp["conv_b"])
+                      .astype(jnp.float32)).astype(h.dtype)
+    xs = xbc[..., :di].reshape(bsz, s, nh, hdim)
+    bmat = xbc[..., di:di + gr * st].reshape(bsz, s, gr, st)
+    cmat = xbc[..., di + gr * st:].reshape(bsz, s, gr, st)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + mp["dt_bias"])
+    a = -jnp.exp(mp["a_log"])
+    y, final_state = ssm_mod.ssd_scan_ref(xs, dt, a, bmat, cmat,
+                                          chunk=cfg.ssm_chunk)
+    y = y + mp["d_skip"][None, None, :, None] * xs
+    y = y.reshape(bsz, s, di)
+    y = gated_rms_norm(y, z, mp["norm_scale"], cfg.norm_eps)
+    return y @ mp["out_proj"], final_state, conv_state

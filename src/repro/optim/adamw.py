@@ -1,0 +1,79 @@
+"""AdamW with sharding-transparent state (m/v mirror the param shardings)
+plus the engine's layerwise-immediate update mode (paper §III-C2 ❹:
+backprop operator reordering — gradients are consumed right after their
+layer's update instead of being held for a global step)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Params
+    v: Params
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+
+
+def init(params: Params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32) \
+        if jnp.issubdtype(p.dtype, jnp.floating) else jnp.zeros_like(p)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree_util.tree_leaves(tree)
+              if jnp.issubdtype(g.dtype, jnp.floating)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply(grads: Params, params: Params, state: AdamWState,
+          cfg: AdamWConfig = AdamWConfig(),
+          lr_scale: jax.Array | float = 1.0) -> Tuple[Params, AdamWState]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        if not jnp.issubdtype(p.dtype, jnp.floating):
+            return p, m, v
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p.astype(jnp.float32))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

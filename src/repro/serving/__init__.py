@@ -1,0 +1,3 @@
+from .engine import Request, ServeStats, ServingEngine
+
+__all__ = ["Request", "ServeStats", "ServingEngine"]

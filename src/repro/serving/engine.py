@@ -1,0 +1,158 @@
+"""Batched serving runtime: request scheduler + uniform-step decode engine.
+
+Requests arrive asynchronously; the scheduler packs them into fixed decode
+slots (continuous batching with slot recycling).  Under the middleware, the
+adaptation loop may swap the model variant or engine options between
+decode steps — the engine re-jits lazily and keeps per-slot caches valid
+only within a variant generation (the paper's "per-second adaptation
+frequency" maps to a generation counter here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.configs import ModelConfig
+from repro.models.layers import Params
+from repro.models.model import decode_step, init_cache, prefill
+from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int = 16
+    arrived_s: float = 0.0
+    # filled by the engine
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+
+
+@dataclass
+class ServeStats:
+    steps: int = 0
+    tokens_out: int = 0
+    prefills: int = 0
+    recompiles: int = 0
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.tokens_out / max(self.steps, 1)
+
+
+class ServingEngine:
+    """Slot-based continuous batching over the unified decode API."""
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, slots: int = 8,
+                 max_seq: int = 512, opts: RuntimeOptions = DEFAULT_OPTIONS):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.opts = opts
+        self.stats = ServeStats()
+        self._queue: List[Request] = []
+        self._active: List[Optional[Request]] = [None] * slots
+        self._caches = [init_cache(cfg, 1, max_seq, opts)
+                        for _ in range(slots)]
+        self._jit_decode = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t, opts))
+        self._jit_prefill = None  # shapes vary; built per prompt bucket
+        self._prefill_cache: Dict[int, Callable] = {}
+        self.generation = 0
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _bucket(self, n: int) -> int:
+        b = 16
+        while b < n:
+            b *= 2
+        return min(b, self.max_seq)
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        if bucket not in self._prefill_cache:
+            cfg, opts = self.cfg, self.opts
+            self._prefill_cache[bucket] = jax.jit(
+                lambda p, c, t: prefill(p, cfg, t, c, opts))
+            self.stats.recompiles += 1
+        return self._prefill_cache[bucket]
+
+    # ------------------------------------------------------------ stepping --
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self._active[slot] is not None or not self._queue:
+                continue
+            req = self._queue.pop(0)
+            bucket = self._bucket(len(req.prompt))
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, bucket - len(req.prompt):] = req.prompt  # left-pad
+            cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
+            logits, cache = self._prefill_fn(bucket)(
+                self.params, cache, jnp.asarray(toks))
+            self._caches[slot] = cache
+            nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
+            req.generated.append(nxt)
+            self._active[slot] = req
+            self.stats.prefills += 1
+            self.stats.tokens_out += 1
+
+    def step(self) -> int:
+        """One engine tick: admit waiting requests, decode one token for
+        every active slot.  Returns number of tokens emitted."""
+        self._admit()
+        emitted = 0
+        for slot, req in enumerate(self._active):
+            if req is None:
+                continue
+            tok = jnp.asarray([req.generated[-1]], jnp.int32)
+            logits, cache = self._jit_decode(self.params,
+                                             self._caches[slot], tok)
+            self._caches[slot] = cache
+            nxt = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
+            req.generated.append(nxt)
+            emitted += 1
+            if len(req.generated) >= req.max_new_tokens \
+                    or int(cache["pos"]) >= self.max_seq - 1:
+                req.done = True
+                self._active[slot] = None
+        self.stats.steps += 1
+        self.stats.tokens_out += emitted
+        return emitted
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        while (any(self._active) or self._queue) and max_steps:
+            self.step()
+            max_steps -= 1
+
+    # ----------------------------------------------------------- adaptation --
+    def swap_model(self, cfg: ModelConfig, params: Params,
+                   opts: RuntimeOptions) -> None:
+        """Middleware hook: switch the serving variant.  Active requests
+        finish their decode on fresh caches via re-prefill of their
+        generated prefix (retraining-free variant switching)."""
+        pending = [r for r in self._active if r is not None]
+        for r in pending:
+            r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
+                                                            np.int32)])
+            self._queue.insert(0, dataclasses.replace(
+                r, prompt=r_prompt, generated=list(r.generated)))
+        self.cfg, self.params, self.opts = cfg, params, opts
+        self._active = [None] * self.slots
+        self._caches = [init_cache(cfg, 1, self.max_seq, opts)
+                        for _ in range(self.slots)]
+        self._jit_decode = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t, opts))
+        self._prefill_cache.clear()
+        self.generation += 1
+        self.stats.recompiles += 1

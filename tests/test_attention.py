@@ -1,0 +1,95 @@
+"""Attention path equivalences + causality properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (banded_attention, chunked_attention,
+                                    decode_attention, full_attention,
+                                    update_kv_cache)
+
+
+def _qkv(key, b=2, s=256, h=4, k=2, hd=32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    kk = jax.random.normal(ks[1], (b, s, k, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, k, hd), jnp.float32)
+    return q, kk, v
+
+
+@pytest.mark.parametrize("qc,kc", [(64, 64), (128, 256), (256, 128)])
+def test_chunked_equals_full(qc, kc):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    ref = full_attention(q, k, v, causal=True)
+    out = chunked_attention(q, k, v, causal=True, q_chunk=qc, k_chunk=kc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_banded_equals_full_windowed(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1))
+    ref = full_attention(q, k, v, causal=True, window=window)
+    out = banded_attention(q, k, v, window=window, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_window_mask():
+    q, k, v = _qkv(jax.random.PRNGKey(2))
+    ref = full_attention(q, k, v, causal=True, window=64)
+    out = chunked_attention(q, k, v, causal=True, window=64,
+                            q_chunk=128, k_chunk=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_causality_property():
+    """Perturbing a future token must not change earlier outputs."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), s=64)
+    out1 = full_attention(q, k, v, causal=True)
+    k2 = k.at[:, 50].add(100.0)
+    v2 = v.at[:, 50].add(100.0)
+    out2 = full_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(out1[:, :50]),
+                               np.asarray(out2[:, :50]), atol=1e-6)
+    assert not np.allclose(np.asarray(out1[:, 50:]), np.asarray(out2[:, 50:]))
+
+
+def test_decode_matches_full_row():
+    b, s, h, kh, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(4), b=b, s=s, h=h, k=kh, hd=hd)
+    ref = full_attention(q, k, v, causal=True)
+    for pos in (0, 7, 31):
+        kc = jnp.zeros((b, 64, kh, hd))
+        vc = jnp.zeros((b, 64, kh, hd))
+        kc = kc.at[:, : pos + 1].set(k[:, : pos + 1])
+        vc = vc.at[:, : pos + 1].set(v[:, : pos + 1])
+        out = decode_attention(q[:, pos], kc, vc, jnp.int32(pos))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref[:, pos]),
+                                   atol=2e-5)
+
+
+def test_decode_window_limits_context():
+    """With a window, tokens older than `window` must have no influence."""
+    b, s, kh, hd = 1, 64, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, 4, hd))
+    q = q.reshape(b, 4, hd)
+    k = jax.random.normal(jax.random.PRNGKey(6), (b, 128, kh, hd))
+    v = jax.random.normal(jax.random.PRNGKey(7), (b, 128, kh, hd))
+    pos = jnp.int32(63)
+    out1 = decode_attention(q, k, v, pos, window=16)
+    # perturb entries older than the window
+    k2 = k.at[:, :40].add(50.0)
+    v2 = v.at[:, :40].add(50.0)
+    out2 = decode_attention(q, k2, v2, pos, window=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_update_kv_cache_inserts_at_pos():
+    b, kh, hd = 2, 2, 8
+    kc = jnp.zeros((b, 16, kh, hd))
+    vc = jnp.ones((b, 16, kh, hd))
+    knew = jnp.full((b, kh, hd), 3.0)
+    vnew = jnp.full((b, kh, hd), 4.0)
+    kc2, vc2 = update_kv_cache(kc, vc, knew, vnew, jnp.int32(5))
+    assert float(kc2[0, 5, 0, 0]) == 3.0
+    assert float(vc2[0, 5, 0, 0]) == 4.0
+    assert float(kc2[0, 4, 0, 0]) == 0.0

@@ -1,0 +1,44 @@
+"""Bonus architectures (beyond the assigned grid): smoke + dry-run-style
+reduced compile, proving the framework generalizes past the assignment."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import BONUS_ARCHS, get_config
+from repro.models import (RuntimeOptions, decode_step, forward, init_cache,
+                          init_params, prefill)
+
+
+@pytest.mark.parametrize("arch", BONUS_ARCHS)
+def test_bonus_forward_and_decode(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opts = RuntimeOptions(moe_capacity_factor=8.0)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    logits, _ = forward(params, cfg, tokens, opts)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    cache = init_cache(cfg, 2, 24, opts)
+    _, cache = prefill(params, cfg, tokens[:, :11], cache, opts)
+    lg, _ = decode_step(params, cfg, cache, tokens[:, 11], opts)
+    ref = logits[:, -1].astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(ref - lg.astype(jnp.float32)))) / (
+        float(jnp.max(jnp.abs(ref))) + 1e-9)
+    assert rel < 0.06, arch
+
+
+@pytest.mark.parametrize("arch", BONUS_ARCHS)
+def test_bonus_param_specs_divisible(arch):
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.sharding import param_specs
+    from repro.launch.steps import params_spec_struct
+    cfg = get_config(arch)
+    tree = params_spec_struct(cfg)
+    specs = param_specs(cfg, tree)
+    for leaf, spec in zip(
+            jax.tree_util.tree_leaves(tree),
+            jax.tree_util.tree_leaves(specs,
+                                      is_leaf=lambda x: isinstance(x, P))):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is not None:
+                assert dim % 16 == 0, (arch, leaf.shape, spec)

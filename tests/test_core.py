@@ -1,0 +1,169 @@
+"""Middleware core: profiler Eq.1/2, optimizer Pareto/AHP (property-based),
+adaptation loop behavior under context traces."""
+import dataclasses
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.core import (ActionEvaluator, Budgets, ResourceContext,
+                        ahp_weights, budget_sweep_trace, case_study_trace,
+                        context_ahp, estimate_energy, estimate_latency,
+                        layer_costs, nondominated_front, rank_consistency,
+                        select_online, AdaptationLoop, TPU_V5E)
+from repro.core.actions import Action, default_action_space
+from repro.core.profiler import analytic_step_costs, collective_bytes_from_hlo
+from repro.elastic import VariantSpec
+from repro.models.configs import INPUT_SHAPES, InputShape
+
+CFG = get_config("paper-backbone")
+SHAPE = InputShape("t", 512, 8, "prefill")
+
+
+def test_layer_costs_structure():
+    costs = layer_costs(CFG, 2, 128)
+    # attn + ffn per layer + lm head
+    assert len(costs) == 2 * CFG.num_layers + 1
+    assert all(c.macs > 0 and c.bytes > 0 for c in costs)
+
+
+def test_eq2_latency_monotone_in_eps():
+    """Higher cache-hit-rate must never increase latency (paper Eq. 2)."""
+    costs = layer_costs(CFG, 2, 128)
+    lats = [estimate_latency(costs, eps) for eps in (0.1, 0.5, 0.9)]
+    assert lats[0] > lats[1] > lats[2]
+
+
+def test_eq1_energy_monotone_in_eps():
+    costs = layer_costs(CFG, 2, 128)
+    es = [estimate_energy(costs, eps) for eps in (0.1, 0.5, 0.9)]
+    assert es[0] > es[1] > es[2]
+
+
+def test_profiler_ranks_model_sizes():
+    """Bigger variants must rank strictly slower/hungrier — the paper's
+    'consistent ranking' requirement."""
+    sizes = [0.5, 0.75, 1.0]
+    lats, ens = [], []
+    for r in sizes:
+        c = CFG.with_updates(d_ff=int(CFG.d_ff * r),
+                             num_layers=max(1, int(CFG.num_layers * r)))
+        costs = layer_costs(c, 2, 128)
+        lats.append(estimate_latency(costs, 0.5))
+        ens.append(estimate_energy(costs, 0.5))
+    assert rank_consistency(lats, [1, 2, 3]) == 1.0
+    assert rank_consistency(ens, [1, 2, 3]) == 1.0
+
+
+def test_analytic_step_costs_scale_with_work():
+    f_tr, b_tr = analytic_step_costs(CFG, INPUT_SHAPES["train_4k"], "full")
+    f_fw, _ = analytic_step_costs(CFG, INPUT_SHAPES["train_4k"])
+    f_pf, b_pf = analytic_step_costs(CFG, INPUT_SHAPES["prefill_32k"])
+    f_dc, b_dc = analytic_step_costs(CFG, INPUT_SHAPES["decode_32k"])
+    assert f_tr > f_fw          # remat adds recompute
+    assert f_tr > f_dc and f_pf > f_dc
+    assert b_dc > 0
+
+
+def test_collective_parse_handles_layouts():
+    hlo = """
+ENTRY %main (p: bf16[8,128]) -> bf16[8,128] {
+  %ag = bf16[64,5120]{1,0} all-gather(%p), replica_groups={}
+  %ar = f32[16,4096,5120]{2,1,0} all-reduce(%x), to_apply=%add
+  %ags = (bf16[2,4]{1,0}, bf16[2,4]{1,0}) all-gather-start(%p)
+  %agd = bf16[2,4]{1,0} all-gather-done(%ags)
+}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 64 * 5120 * 2 + 2 * (2 * 4 * 2)
+    assert out["all-reduce"] == 16 * 4096 * 5120 * 4
+
+
+# ------------------------------------------------------------- optimizer ---
+def test_pareto_front_is_nondominated():
+    ev = ActionEvaluator(CFG, SHAPE)
+    ctx = ResourceContext()
+    actions = default_action_space(
+        (VariantSpec(), VariantSpec(depth_ratio=0.5),
+         VariantSpec(width_ratio=0.5)), allow_offload=False)
+    evals = [ev.evaluate(a, ctx) for a in actions]
+    front = nondominated_front(evals)
+    assert front
+    for e in front:
+        for f in evals:
+            assert not (f.accuracy > e.accuracy and f.energy_j < e.energy_j)
+
+
+def test_select_online_respects_budgets():
+    ev = ActionEvaluator(CFG, SHAPE)
+    ctx = ResourceContext(battery_frac=0.5)
+    actions = default_action_space(
+        (VariantSpec(), VariantSpec(depth_ratio=0.5)), allow_offload=False)
+    evals = [ev.evaluate(a, ctx) for a in actions]
+    front = nondominated_front(evals)
+    mem_cap = np.median([e.memory_bytes for e in front])
+    choice = select_online(front, ctx, Budgets(memory_bytes=mem_cap))
+    assert choice is not None
+    assert choice.memory_bytes <= mem_cap
+
+
+def test_mu_tradeoff_direction():
+    """Low battery (μ→0) must pick lower-energy actions than high battery."""
+    ev = ActionEvaluator(CFG, SHAPE)
+    actions = default_action_space(
+        (VariantSpec(), VariantSpec(depth_ratio=0.5, width_ratio=0.5)),
+        allow_offload=False)
+    front = nondominated_front(
+        [ev.evaluate(a, ResourceContext()) for a in actions])
+    rich = select_online(front, ResourceContext(battery_frac=0.95), Budgets())
+    poor = select_online(front, ResourceContext(battery_frac=0.05), Budgets())
+    assert poor.energy_j <= rich.energy_j
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.95), st.floats(0.05, 0.95))
+def test_ahp_weights_valid(bat, mem):
+    w = context_ahp(ResourceContext(battery_frac=bat, mem_free_frac=mem))
+    assert abs(float(w.sum()) - 1.0) < 1e-6
+    assert all(float(x) >= 0 for x in w)
+
+
+def test_ahp_pairwise_eigenvector():
+    m = np.array([[1.0, 3.0], [1 / 3.0, 1.0]])
+    w = ahp_weights(m)
+    assert w[0] > w[1]
+    np.testing.assert_allclose(w[0] / w[1], 3.0, rtol=1e-6)
+
+
+# ------------------------------------------------------------ the loop -----
+def test_loop_budget_sweep_shrinks_memory():
+    """Paper Table II: tighter memory budgets -> smaller selected memory."""
+    loop = AdaptationLoop(cfg=CFG, shape=SHAPE, allow_offload=False,
+                          hysteresis=0.0)
+    loop.build_pareto(evolve=False)
+    mems = []
+    for ctx in budget_sweep_trace((1.0, 0.5, 0.25)):
+        # scale hbm budget context: 8GB baseline
+        ctx = dataclasses.replace(ctx, chips_available=1)
+        d = loop.tick(ctx)
+        mems.append(d.eval.memory_bytes)
+    assert mems[-1] <= mems[0]
+
+
+def test_loop_hysteresis_holds():
+    loop = AdaptationLoop(cfg=CFG, shape=SHAPE, allow_offload=False,
+                          hysteresis=10.0)  # huge: never switch
+    ctx0 = ResourceContext()
+    d0 = loop.tick(ctx0)
+    d1 = loop.tick(dataclasses.replace(ctx0, battery_frac=0.5))
+    assert d1.action == d0.action
+    assert "hold" in d1.reason
+
+
+def test_case_study_trace_shape():
+    tr = list(case_study_trace(10))
+    assert len(tr) == 10
+    assert tr[0].battery_frac > tr[-1].battery_frac
+    assert any(c.mem_free_frac < 0.4 for c in tr)

@@ -1,0 +1,137 @@
+"""Elastic-inference component: η operators, supernet, early exit, TTA."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.elastic import (FULL_SPEC, NAMED_COMBOS, ElasticSupernet,
+                           VariantSpec, attach_exits, derive_variant,
+                           early_exit_predict, ensemble_loss, sliced_forward,
+                           tta_step, variant_cost)
+from repro.models import forward, init_params
+
+CFG = get_config("paper-backbone")
+KEY = jax.random.PRNGKey(0)
+PARAMS = init_params(CFG, KEY)
+TOKENS = jax.random.randint(KEY, (2, 32), 0, CFG.vocab_size)
+
+
+@pytest.mark.parametrize("name", sorted(NAMED_COMBOS))
+def test_variant_runs_and_shrinks(name):
+    spec = NAMED_COMBOS[name]
+    vcfg, vparams = derive_variant(CFG, PARAMS, spec)
+    logits, _ = forward(vparams, vcfg, TOKENS)
+    assert logits.shape == (2, 32, CFG.padded_vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    cost = variant_cost(CFG, spec)
+    full = variant_cost(CFG, FULL_SPEC)
+    assert cost["flops_per_token"] < full["flops_per_token"]
+
+
+def test_variant_output_close_to_backbone():
+    """Weight recycling: a mild variant must stay close to the backbone
+    (retraining-free switching keeps function approximately intact)."""
+    base, _ = forward(PARAMS, CFG, TOKENS)
+    vcfg, vparams = derive_variant(CFG, PARAMS, VariantSpec(rank_ratio=0.9))
+    lg, _ = forward(vparams, vcfg, TOKENS)
+    base = jax.nn.softmax(base.astype(jnp.float32), -1)
+    lg = jax.nn.softmax(lg.astype(jnp.float32), -1)
+    tv = float(0.5 * jnp.abs(base - lg).sum(-1).mean())
+    assert tv < 0.30, f"rank-0.9 variant drifted too far (TV={tv})"
+
+
+def test_eta5_depth_slices_layers():
+    vcfg, vparams = derive_variant(CFG, PARAMS, VariantSpec(depth_ratio=0.5))
+    assert vcfg.num_layers == CFG.num_layers // 2
+    leaf = jax.tree_util.tree_leaves(vparams["layers"])[0]
+    assert leaf.shape[0] == vcfg.num_layers
+
+
+def test_eta6_importance_ordering():
+    """Channel slicing keeps the highest-importance channels."""
+    from repro.elastic.operators import _ffn_channel_importance
+    layer0 = {k: np.asarray(v)[0] for k, v in PARAMS["layers"]["ffn"].items()}
+    imp = _ffn_channel_importance(layer0)
+    vcfg, vparams = derive_variant(CFG, PARAMS, VariantSpec(width_ratio=0.5))
+    kept = vcfg.d_ff
+    # mean importance of kept channels must exceed the dropped ones'
+    thresh = np.sort(imp)[::-1][kept - 1]
+    assert np.mean(np.sort(imp)[::-1][:kept]) >= np.mean(imp)
+
+
+def test_eta2_kv_merge_halves_heads():
+    vcfg, vparams = derive_variant(CFG, PARAMS, VariantSpec(kv_merge=2))
+    assert vcfg.num_kv_heads == CFG.num_kv_heads // 2
+    wk = vparams["layers"]["attn"]["wk"]
+    assert wk.shape[-1] == vcfg.num_kv_heads * vcfg.resolved_head_dim
+
+
+def test_supernet_caching_and_action_space():
+    sn = ElasticSupernet(CFG, PARAMS, max_cached=2)
+    space = sn.action_space()
+    assert FULL_SPEC in space and len(space) >= 6
+    a = sn.variant(space[1])
+    b = sn.variant(space[1])
+    assert a is b  # cached
+    sn.variant(space[2])
+    sn.variant(space[3])  # evicts
+    assert len(sn._cache) <= 2
+
+
+def test_ssm_action_space_is_depth_only():
+    ssm_cfg = get_config("mamba2-370m").reduced()
+    p = init_params(ssm_cfg, KEY)
+    sn = ElasticSupernet(ssm_cfg, p)
+    assert sn.applicable_operators() == ("eta5",)
+    for spec in sn.action_space():
+        assert spec.width_ratio == 1.0 and spec.rank_ratio == 1.0
+
+
+def test_early_exit_monotone_threshold():
+    p2 = attach_exits(CFG, PARAMS, KEY, positions=(2, 5))
+    _, depth_strict = early_exit_predict(p2, CFG, TOKENS, threshold=0.99)
+    _, depth_loose = early_exit_predict(p2, CFG, TOKENS, threshold=0.0)
+    # threshold 0 exits everything at the first branch
+    assert int(depth_loose.max()) == 0
+    assert float(depth_strict.mean()) >= float(depth_loose.mean())
+
+
+def test_tta_reduces_entropy_and_touches_only_norms():
+    # sharpen the random-init logits so the entropy objective has signal
+    sharp = dict(PARAMS)
+    sharp["embed"] = PARAMS["embed"] * 8.0
+    p1, e1 = tta_step(sharp, CFG, TOKENS, lr=5e-2)
+    p2, e2 = tta_step(p1, CFG, TOKENS, lr=5e-2)
+    assert float(e2) < float(e1)
+    PARAMS_ = sharp
+    for kp, (a, b) in zip(
+            jax.tree_util.tree_leaves_with_path(sharp),
+            zip(jax.tree_util.tree_leaves(sharp),
+                jax.tree_util.tree_leaves(p1))):
+        names = [str(getattr(k, "key", "")) for k in kp[0]]
+        changed = not bool(jnp.array_equal(a, b))
+        is_norm = any(n in ("ln1", "ln2", "final_norm", "ln", "norm_scale")
+                      for n in names)
+        if changed:
+            assert is_norm, f"non-norm leaf changed: {names}"
+
+
+def test_ensemble_loss_trains_slices():
+    labels = jnp.roll(TOKENS, -1, 1)
+    spec = VariantSpec(depth_ratio=0.5, width_ratio=0.5)
+    loss, grads = jax.value_and_grad(
+        lambda p: ensemble_loss(p, CFG, TOKENS, labels, KEY, (spec,)))(PARAMS)
+    assert jnp.isfinite(loss)
+    # gradient must reach the FULL ffn tensor (recycled weights)
+    g = grads["layers"]["ffn"]["w_up"]
+    assert float(jnp.abs(g[:, :, : CFG.d_ff // 2]).sum()) > 0
+    # prefix-slice training: sliced channels get gradient from 2 paths
+    assert bool(jnp.isfinite(g).all())
+
+
+def test_sliced_forward_prefix_semantics():
+    lg = sliced_forward(PARAMS, CFG, TOKENS,
+                        VariantSpec(depth_ratio=0.5, width_ratio=0.5))
+    assert lg.shape == (2, 32, CFG.padded_vocab)
+    assert not bool(jnp.isnan(lg.astype(jnp.float32)).any())

@@ -1,0 +1,144 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (act_dequant, act_quant, flash_attention, fused_ffn,
+                           ssd_scan)
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("m,n", [(128, 256), (256, 512), (64, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_act_quant_matches_ref(m, n, dtype):
+    x = (jax.random.normal(jax.random.PRNGKey(m + n), (m, n)) * 3).astype(dtype)
+    q, s = act_quant(x, interpret=True, block_m=64, block_n=128)
+    qr, sr = ref.act_quant_ref(x)
+    # identical up to +-1 level on round-half ties (f32 association order)
+    diff = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert diff.max() <= 1
+    assert (diff != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    # roundtrip error bounded by scale/2 per element
+    xd = act_dequant(q, s, out_dtype=jnp.float32, interpret=True,
+                     block_m=64, block_n=128)
+    err = jnp.abs(xd - x.astype(jnp.float32))
+    bound = jnp.repeat(s, 128, axis=-1) * 0.51 + 1e-6
+    assert bool(jnp.all(err <= bound))
+
+
+@pytest.mark.parametrize("m,d,f", [(128, 64, 256), (256, 128, 512),
+                                   (64, 96, 128)])
+@pytest.mark.parametrize("activation", ["silu", "gelu"])
+def test_fused_ffn_matches_ref(m, d, f, activation):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (m, d), jnp.float32) * 0.5
+    wg = jax.random.normal(ks[1], (d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (f, d)) * 0.1
+    y = fused_ffn(x, wg, wu, wd, activation=activation, interpret=True,
+                  block_m=64, block_f=128)
+    yr = ref.fused_ffn_ref(x, wg, wu, wd, activation)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_fused_ffn_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = (jax.random.normal(ks[0], (128, 64)) * 0.5).astype(jnp.bfloat16)
+    wg = (jax.random.normal(ks[1], (64, 256)) * 0.1).astype(jnp.bfloat16)
+    wu = (jax.random.normal(ks[2], (64, 256)) * 0.1).astype(jnp.bfloat16)
+    wd = (jax.random.normal(ks[3], (256, 64)) * 0.1).astype(jnp.bfloat16)
+    y = fused_ffn(x, wg, wu, wd, interpret=True, block_m=64, block_f=128)
+    yr = ref.fused_ffn_ref(x, wg, wu, wd, "silu")
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), atol=3e-2)
+
+
+@pytest.mark.parametrize("s,hd", [(256, 64), (512, 128), (128, 32)])
+@pytest.mark.parametrize("window", [0, 64])
+def test_flash_attention_matches_ref(s, hd, window):
+    ks = jax.random.split(jax.random.PRNGKey(s), 3)
+    bh = 4
+    q = jax.random.normal(ks[0], (bh, s, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (bh, s, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (bh, s, hd), jnp.float32)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        block_q=128, block_k=128, interpret=True)
+    orf = ref.flash_attn_ref(q[None].reshape(1, bh, s, hd),
+                             k.reshape(1, bh, s, hd),
+                             v.reshape(1, bh, s, hd),
+                             causal=True, window=window)[0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q, k, v = (jax.random.normal(kk, (2, 128, 64)) for kk in ks)
+    o = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                        interpret=True)
+    orf = ref.flash_attn_ref(q.reshape(1, 2, 128, 64),
+                             k.reshape(1, 2, 128, 64),
+                             v.reshape(1, 2, 128, 64), causal=False)[0]
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=2e-5)
+
+
+@pytest.mark.parametrize("s,p,n,chunk", [(64, 16, 8, 16), (128, 32, 16, 32),
+                                         (96, 8, 4, 32)])
+def test_ssd_scan_matches_ref(s, p, n, chunk):
+    bh = 3
+    ks = jax.random.split(jax.random.PRNGKey(s + p), 5)
+    x = jax.random.normal(ks[0], (bh, s, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s)))
+    a = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.2)
+    b = jax.random.normal(ks[3], (bh, s, n)) * 0.5
+    c = jax.random.normal(ks[4], (bh, s, n)) * 0.5
+    y, st = ssd_scan(x, dt, a, b, c, chunk=chunk, interpret=True)
+    yr, str_ = ref.ssd_scan_kernel_ref(x, dt, a, b, c, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd_scan_chunk_invariance():
+    """The kernel result must not depend on the chunk size."""
+    bh, s, p, n = 2, 128, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (bh, s, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, s)))
+    a = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.2)
+    b = jax.random.normal(ks[3], (bh, s, n)) * 0.5
+    c = jax.random.normal(ks[4], (bh, s, n)) * 0.5
+    y16, st16 = ssd_scan(x, dt, a, b, c, chunk=16, interpret=True)
+    y64, st64 = ssd_scan(x, dt, a, b, c, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st16), np.asarray(st64),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ops_dispatch_cpu_fallback():
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128))
+    q1, s1 = ops.quantize_activations(x, use_pallas=False)
+    q2, s2 = ops.quantize_activations(x, use_pallas=True, interpret=True)
+    assert int(jnp.abs(q1.astype(jnp.int32) - q2.astype(jnp.int32)).max()) <= 1
+
+
+@pytest.mark.parametrize("m,n", [(64, 256), (128, 512)])
+def test_act_quant4_matches_engine_codec(m, n):
+    from repro.engine import quantize_int4
+    from repro.kernels import act_quant4
+    x = jax.random.normal(jax.random.PRNGKey(m * n), (m, n)) * 2
+    packed, s = act_quant4(x, interpret=True, block_m=64, block_n=128)
+    ref_packed, ref_s = quantize_int4(x)
+    # engine codec blocks over the flattened last dim identically
+    diff = np.asarray(packed, np.int32) - np.asarray(ref_packed, np.int32)
+    # allow rare +-1-level tie differences in EITHER nibble
+    lo = np.abs((diff & 0xF).astype(np.int8))
+    assert (np.minimum(lo, 16 - lo) <= 1).all()
+    np.testing.assert_allclose(np.asarray(s),
+                               np.asarray(ref_s.reshape(s.shape)), rtol=1e-5)

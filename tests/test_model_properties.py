@@ -1,0 +1,108 @@
+"""Hypothesis property tests on model-level invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.models import (RuntimeOptions, forward, init_params, lm_loss)
+from repro.models.layers import (apply_rotary, mask_padded_logits_raw,
+                                 rms_norm, rotary_embedding)
+
+CFG = get_config("paper-backbone").with_updates(num_layers=2, d_model=64,
+                                                num_heads=4, num_kv_heads=2,
+                                                head_dim=16, d_ff=128,
+                                                vocab_size=300)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.5, 8.0))
+def test_rms_norm_scale_invariance(seed, scale):
+    """rms_norm(a*x) == rms_norm(x) — the property TTA's norm-only
+    updates rely on."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32))
+    g = jnp.zeros((32,))
+    np.testing.assert_allclose(np.asarray(rms_norm(x * scale, g)),
+                               np.asarray(rms_norm(x, g)), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(0, 500))
+def test_rotary_preserves_norm_and_relative_phase(seed, offset):
+    """Rotary embedding is an isometry and depends only on relative
+    positions for dot products."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(seed), (1, 4, 2, hd))
+    pos = jnp.arange(4)[None, :] + offset
+    sin, cos = rotary_embedding(pos, hd)
+    qr = apply_rotary(q, sin, cos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(qr), axis=-1),
+                               np.linalg.norm(np.asarray(q), axis=-1),
+                               rtol=1e-5)
+    # relative phase: <rot(q,p1), rot(k,p2)> == <rot(q,p1+d), rot(k,p2+d)>
+    k = jax.random.normal(jax.random.PRNGKey(seed + 1), (1, 4, 2, hd))
+    kr = apply_rotary(k, sin, cos)
+    dot1 = np.einsum("bshd,bthd->bst", np.asarray(qr), np.asarray(kr))
+    sin2, cos2 = rotary_embedding(pos + 37, hd)
+    qr2 = apply_rotary(q, sin2, cos2)
+    kr2 = apply_rotary(k, sin2, cos2)
+    dot2 = np.einsum("bshd,bthd->bst", np.asarray(qr2), np.asarray(kr2))
+    np.testing.assert_allclose(dot1, dot2, atol=1e-3)
+
+
+def test_model_causality():
+    """Changing token t must not change logits before t."""
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, 300)
+    lg1, _ = forward(PARAMS, CFG, tokens,
+                     RuntimeOptions(attn_impl="full"))
+    tokens2 = tokens.at[0, 10].set((tokens[0, 10] + 7) % 300)
+    lg2, _ = forward(PARAMS, CFG, tokens2,
+                     RuntimeOptions(attn_impl="full"))
+    np.testing.assert_allclose(np.asarray(lg1[:, :10], np.float32),
+                               np.asarray(lg2[:, :10], np.float32),
+                               atol=1e-3)
+    assert not np.allclose(np.asarray(lg1[:, 10:], np.float32),
+                           np.asarray(lg2[:, 10:], np.float32))
+
+
+def test_padded_vocab_masked_everywhere():
+    """Vocab 300 pads to 512; padded logits must never win an argmax."""
+    assert CFG.padded_vocab == 512
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, 300)
+    logits, _ = forward(PARAMS, CFG, tokens)
+    assert logits.shape[-1] == 512
+    arg = np.asarray(jnp.argmax(logits, -1))
+    assert (arg < 300).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_lm_loss_bounds(seed):
+    """Cross entropy of uniform logits == log(V); mask semantics hold."""
+    v = 64
+    logits = jnp.zeros((2, 8, v))
+    labels = jax.random.randint(jax.random.PRNGKey(seed), (2, 8), 0, v)
+    np.testing.assert_allclose(float(lm_loss(logits, labels)), np.log(v),
+                               rtol=1e-5)
+    mask = jnp.zeros((2, 8)).at[:, 0].set(1.0)
+    assert float(lm_loss(logits, labels, mask)) == pytest.approx(np.log(v),
+                                                                 rel=1e-5)
+
+
+def test_moe_capacity_drops_bounded():
+    """With capacity factor 1.0 at most (1 - 1/cf_overhead) of gate mass is
+    dropped; with a big factor nothing drops."""
+    from repro.models import moe as moe_mod
+    cfg = get_config("olmoe-1b-7b").reduced()
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model)) * 0.3
+    y_small, _ = moe_mod.moe_apply(params, x, cfg, capacity_factor=1.0)
+    y_big, _ = moe_mod.moe_apply(params, x, cfg, capacity_factor=16.0)
+    assert y_small.shape == y_big.shape
+    # big capacity is the reference; small capacity differs only via drops
+    diff = float(jnp.abs(y_small - y_big).mean())
+    ref = float(jnp.abs(y_big).mean())
+    assert diff < ref  # drops lose mass; they never add energy

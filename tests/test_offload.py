@@ -1,0 +1,158 @@
+"""Offload component: pre-partition invariants, placement optimality,
+transformation semantic equivalence."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.offload import (DEVICE_POOLS, DeviceProfile, Graph, OpNode,
+                           build_model_graph, convert, execute,
+                           independent_flows, local_only, place_cas,
+                           place_dads, place_dp, pre_partition)
+
+CFG = get_config("paper-backbone")
+G = build_model_graph(CFG, batch=1, seq=128)
+PP = pre_partition(G)
+
+
+def test_prepartition_covers_graph():
+    for level in range(4):
+        units = PP.units(level)
+        covered = [n for u in units for n in u.node_names]
+        assert sorted(covered) == sorted(n.output for n in G.nodes), level
+        assert len(covered) == len(set(covered))
+
+
+def test_prepartition_hierarchy_coarsens():
+    sizes = [len(PP.units(l)) for l in range(4)]
+    assert sizes[0] > sizes[1] > sizes[2] >= sizes[3]
+
+
+def test_prepartition_flops_conserved():
+    total = G.total_flops()
+    for level in range(4):
+        assert abs(sum(u.flops for u in PP.units(level)) - total) < 1e-6
+
+
+def test_dp_beats_heuristics():
+    devs = DEVICE_POOLS["edge_pair"]
+    dp = place_dp(PP, devs)
+    cas = place_cas(PP, devs)
+    loc = local_only(PP, devs)
+    assert dp.latency_s <= cas.latency_s + 1e-9
+    assert dp.latency_s <= loc.latency_s + 1e-9
+
+
+def test_dp_optimal_vs_bruteforce():
+    """On a small chain with 2 devices, DP must equal exhaustive search."""
+    devs = DEVICE_POOLS["edge_pair"]
+    units = PP.units(3)       # 4 coarse stages
+    n = len(units)
+    dp = place_dp(PP, devs, level=3)
+    best = float("inf")
+    for cut in range(-1, n - 1):   # -1 = all on device 0... all splits
+        lat = 0.0
+        feas = True
+        mem0 = sum(u.param_bytes + u.peak_act_bytes for u in units[:cut + 1])
+        mem1 = sum(u.param_bytes + u.peak_act_bytes for u in units[cut + 1:])
+        if cut >= 0:
+            if mem0 > devs[0].mem_bytes or mem1 > devs[1].mem_bytes:
+                continue
+            lat += sum(devs[0].compute_seconds(u) for u in units[:cut + 1])
+            lat += units[cut].boundary_bytes / devs[0].link_bw
+            lat += sum(devs[1].compute_seconds(u) for u in units[cut + 1:])
+        else:
+            if sum(u.param_bytes + u.peak_act_bytes for u in units) \
+                    > devs[0].mem_bytes:
+                continue
+            lat = sum(devs[0].compute_seconds(u) for u in units)
+        best = min(best, lat)
+    assert dp.latency_s <= best + 1e-9
+
+
+def test_placement_respects_memory():
+    tight = (
+        DeviceProfile("small0", 50e9, G.total_param_bytes() * 0.6, 10e9, 1e9),
+        DeviceProfile("small1", 50e9, G.total_param_bytes() * 0.6, 10e9, 0),
+    )
+    pl = place_dp(PP, tight)
+    for m, d in zip(pl.per_device_mem, tight):
+        assert m <= d.mem_bytes + 1e-6
+
+
+def test_placement_infeasible_raises():
+    tiny = (DeviceProfile("t0", 1e9, 1024, 1e9, 1e9),
+            DeviceProfile("t1", 1e9, 1024, 1e9, 0))
+    with pytest.raises(ValueError):
+        place_dp(PP, tiny)
+
+
+def test_independent_flows_topological():
+    flows = independent_flows(G)
+    node_of = G.node_map()
+    seen = set(G.inputs)
+    for level in flows:
+        for t in level:
+            assert all(i in seen for i in node_of[t].inputs)
+        seen.update(level)
+
+
+# ------------------------------------------------ transformation passes ----
+def _rand_graph(seed: int) -> Graph:
+    rng = np.random.default_rng(seed)
+    nodes = [OpNode("w0", "const", (), "w0",
+                    attrs={"value": rng.standard_normal((8, 8)).astype(np.float32)}),
+             OpNode("w1", "const", (), "w1",
+                    attrs={"value": rng.standard_normal((8, 8)).astype(np.float32)})]
+    prev = "x"
+    for i in range(int(rng.integers(2, 6))):
+        kind = rng.choice(["matmul", "act", "add"])
+        if kind == "matmul":
+            nodes.append(OpNode(f"n{i}", "matmul",
+                                (prev, rng.choice(["w0", "w1"])), f"n{i}"))
+        elif kind == "act":
+            nodes.append(OpNode(f"n{i}", "act", (prev,), f"n{i}",
+                                attrs={"fn": str(rng.choice(["relu", "gelu",
+                                                             "silu"]))}))
+        else:
+            nodes.append(OpNode(f"n{i}", "add", (prev, "w0_row"), f"n{i}"))
+            if "w0_row" not in [n.output for n in nodes]:
+                nodes.insert(2, OpNode("w0_row", "const", (), "w0_row",
+                                       attrs={"value": rng.standard_normal(
+                                           (8,)).astype(np.float32)}))
+        prev = f"n{i}"
+    return Graph(nodes=nodes, inputs=("x",), outputs=(prev,))
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_convert_preserves_semantics(seed):
+    g = _rand_graph(seed)
+    x = np.random.default_rng(seed).standard_normal((4, 8)).astype(np.float32)
+    ref = execute(g, {"x": x})[g.outputs[0]]
+    g2 = convert(_rand_graph(seed))
+    out = execute(g2, {"x": x})[g2.outputs[0]]
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+    assert len(g2.nodes) <= len(g.nodes)
+
+
+def test_convert_removes_duplicates_and_constants():
+    nodes = [
+        OpNode("w", "const", (), "w",
+               attrs={"value": np.eye(4, dtype=np.float32)}),
+        OpNode("w_dup", "const", (), "w_dup",
+               attrs={"value": np.eye(4, dtype=np.float32)}),
+        OpNode("m1", "matmul", ("x", "w"), "m1"),
+        OpNode("m2", "matmul", ("x", "w_dup"), "m2"),
+        OpNode("c1", "matmul", ("w", "w_dup"), "c1"),
+        OpNode("cr", "reduce", ("c1",), "cr", attrs={"fn": "mean", "axis": 0}),
+        OpNode("s", "add", ("m1", "m2"), "s"),
+        OpNode("o", "add", ("s", "cr"), "o"),
+    ]
+    g = Graph(nodes=nodes, inputs=("x",), outputs=("o",))
+    g2 = convert(g)
+    kinds = [n.kind for n in g2.nodes]
+    assert kinds.count("matmul") + kinds.count("fused") <= 2
+    x = np.random.randn(3, 4).astype(np.float32)
+    np.testing.assert_allclose(execute(g2, {"x": x})["o"],
+                               execute(g, {"x": x})["o"], atol=1e-5)

@@ -1,0 +1,48 @@
+"""Profiler calibration: the paper's stated requirement is CONSISTENT
+RANKING between estimated and actual performance.  Measure real CPU
+wall-times for a ladder of variants and check Spearman rank agreement
+with the Eq.(2) estimates."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import MOBILE_CPU, estimate_latency, layer_costs, rank_consistency
+from repro.elastic import VariantSpec, derive_variant
+from repro.models import forward, init_params
+
+import time
+
+
+def _walltime(fn, *args, iters=3):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+def test_estimated_latency_ranks_match_measured():
+    cfg = get_config("paper-backbone")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 256), 0,
+                                cfg.vocab_size)
+    ladder = [
+        VariantSpec(),                                   # full
+        VariantSpec(width_ratio=0.75),
+        VariantSpec(width_ratio=0.5, depth_ratio=0.75),
+        VariantSpec(width_ratio=0.5, depth_ratio=0.5),
+    ]
+    est, meas = [], []
+    for spec in ladder:
+        vcfg, vp = derive_variant(cfg, params, spec)
+        costs = layer_costs(vcfg, 2, 256)
+        est.append(estimate_latency(costs, 0.5, MOBILE_CPU))
+        f = jax.jit(lambda p, t: forward(p, vcfg, t)[0])
+        meas.append(_walltime(f, vp, tokens))
+    rho = rank_consistency(est, meas)
+    assert rho >= 0.79, (f"profiler ranking broke: est={est} meas={meas} "
+                         f"rho={rho}")

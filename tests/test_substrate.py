@@ -1,0 +1,151 @@
+"""Substrate: data pipeline, checkpointing, AdamW, serving engine."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM, make_batch_fn
+from repro.checkpoint import (latest_checkpoint, restore_checkpoint,
+                              save_checkpoint)
+from repro.models import init_params
+from repro.models.configs import InputShape
+from repro.optim import AdamWConfig
+from repro.optim import apply as adamw_apply
+from repro.optim import init as adamw_init
+from repro.optim.schedule import warmup_cosine
+from repro.serving import Request, ServingEngine
+
+
+# ---------------------------------------------------------------- data -----
+def test_data_deterministic_and_seekable():
+    d = SyntheticLM(DataConfig(vocab_size=128, seq_len=32, batch_size=4))
+    b1 = d.batch(7)
+    b2 = d.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 32)
+    # labels shifted by one
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_induction_structure():
+    d = SyntheticLM(DataConfig(vocab_size=128, seq_len=64, batch_size=4,
+                               copy_period=16))
+    b = d.batch(0)
+    full = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    for off in range(16, 64, 16):
+        np.testing.assert_array_equal(full[:, off], full[:, off - 16])
+
+
+def test_data_drift_changes_distribution():
+    base = SyntheticLM(DataConfig(vocab_size=512, seq_len=64, batch_size=32))
+    drift = SyntheticLM(DataConfig(vocab_size=512, seq_len=64, batch_size=32,
+                                   drift=0.9))
+    h1 = np.bincount(base.batch(0)["tokens"].ravel(), minlength=512)
+    h2 = np.bincount(drift.batch(0)["tokens"].ravel(), minlength=512)
+    tv = 0.5 * np.abs(h1 / h1.sum() - h2 / h2.sum()).sum()
+    assert tv > 0.1
+
+
+def test_make_batch_fn_modality_stubs():
+    cfg = get_config("whisper-small").reduced()
+    shape = InputShape("t", 32, 2, "train")
+    b = make_batch_fn(cfg, shape)(0)
+    assert b["encoder_frames"].shape == (2, cfg.encoder_seq_len, cfg.d_model)
+    cfg2 = get_config("internvl2-26b").reduced()
+    b2 = make_batch_fn(cfg2, shape)(0)
+    assert b2["vision_embeds"].shape == (2, cfg2.num_vision_tokens,
+                                         cfg2.vision_embed_dim)
+
+
+# ------------------------------------------------------------ checkpoint ---
+def test_checkpoint_roundtrip():
+    cfg = get_config("paper-backbone").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(f"{td}/step_000010", params, step=10,
+                        metadata={"arch": cfg.name})
+        like = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(1)))
+        restored, step = restore_checkpoint(f"{td}/step_000010", like)
+        assert step == 10
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert latest_checkpoint(td).name == "step_000010"
+
+
+def test_checkpoint_shape_mismatch_raises():
+    cfg = get_config("paper-backbone").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as td:
+        save_checkpoint(f"{td}/c", params)
+        wrong = jax.eval_shape(lambda: init_params(
+            cfg.with_updates(d_ff=cfg.d_ff * 2), jax.random.PRNGKey(0)))
+        with pytest.raises(ValueError):
+            restore_checkpoint(f"{td}/c", wrong)
+
+
+# ----------------------------------------------------------------- adamw ---
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.2, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_apply(grads, params, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+    assert int(state.step) == 200
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    p1, _ = adamw_apply({"w": jnp.asarray([1e6, 0.0, 0.0])}, params, state,
+                        cfg)
+    assert float(jnp.abs(p1["w"]).max()) < 2.0
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0)) == 0.0
+    assert float(warmup_cosine(100)) == pytest.approx(1.0, abs=1e-3)
+    assert float(warmup_cosine(10_000)) == pytest.approx(0.1, abs=1e-3)
+
+
+# --------------------------------------------------------------- serving ---
+def test_serving_engine_end_to_end():
+    cfg = get_config("paper-backbone").with_updates(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, 256, size=8).astype(np.int32), max_new_tokens=4))
+    eng.drain(max_steps=200)
+    assert eng.stats.prefills == 5
+    assert eng.stats.tokens_out >= 5 * 4
+    assert not eng._queue and not any(eng._active)
+
+
+def test_serving_variant_swap_preserves_requests():
+    cfg = get_config("paper-backbone").with_updates(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+        d_ff=128, vocab_size=256)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, slots=2, max_seq=64)
+    rng = np.random.default_rng(1)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, 256, size=8).astype(np.int32), max_new_tokens=6))
+    eng.step()
+    from repro.elastic import ElasticSupernet, VariantSpec
+    sn = ElasticSupernet(cfg, params)
+    vcfg, vparams = sn.variant(VariantSpec(depth_ratio=0.5))
+    eng.swap_model(vcfg, vparams, eng.opts)
+    eng.drain(max_steps=200)
+    assert eng.generation == 1
+    assert eng.stats.tokens_out >= 3 * 6
