@@ -2,20 +2,24 @@ from .actions import Action, OffloadChoice, default_action_space
 from .loop import AdaptationLoop, Decision
 from .middleware import Middleware
 from .monitor import (ResourceContext, ResourceMonitor, budget_sweep_trace,
-                      case_study_trace, constant_trace, dvfs_spike_trace)
+                      case_study_trace, constant_trace, dvfs_spike_trace,
+                      shape_context, shaped_trace)
 from .optimizer import (ActionEvaluator, Budgets, Evaluation, ahp_weights,
                         context_ahp, evolve_pareto, nondominated_front,
                         select_online)
-from .profiler import (HardwareProfile, LayerCost, MOBILE_CPU, analytic_step_costs,
+from .profiler import (Calibration, HardwareProfile,
+                       LayerCost, MOBILE_CPU, analytic_step_costs,
                        RooflineTerms, TPU_V5E, collective_bytes_from_hlo,
                        estimate_energy, estimate_latency, layer_costs,
                        model_flops_estimate, rank_consistency,
                        roofline_terms)
 
 __all__ = ["analytic_step_costs", "Action", "OffloadChoice", "default_action_space",
-           "AdaptationLoop", "Decision", "Middleware", "ResourceContext",
+           "AdaptationLoop", "Calibration", "Decision",
+           "Middleware", "ResourceContext",
            "ResourceMonitor", "budget_sweep_trace", "case_study_trace",
-           "constant_trace", "dvfs_spike_trace", "ActionEvaluator",
+           "constant_trace", "dvfs_spike_trace", "shape_context",
+           "shaped_trace", "ActionEvaluator",
            "Budgets", "Evaluation", "ahp_weights", "context_ahp",
            "evolve_pareto", "nondominated_front", "select_online",
            "HardwareProfile", "LayerCost", "MOBILE_CPU", "RooflineTerms",

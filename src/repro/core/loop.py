@@ -22,7 +22,7 @@ from .actions import Action, default_action_space
 from .monitor import ResourceContext, ResourceMonitor
 from .optimizer import (ActionEvaluator, Budgets, Evaluation, evolve_pareto,
                         nondominated_front, select_online)
-from .profiler import HardwareProfile, TPU_V5E
+from .profiler import Calibration, HardwareProfile, TPU_V5E
 
 
 @dataclass
@@ -61,6 +61,14 @@ class AdaptationLoop:
         self.current: Optional[Decision] = None
         self.decisions: List[Decision] = []
         self._tick = 0
+
+    # ------------------------------------------------------- calibration --
+    def set_calibration(self, cal: Optional[Calibration]) -> None:
+        """Install a telemetry-derived correction into the evaluator and
+        invalidate the Pareto front (its stored latencies/energies were
+        computed under the previous correction)."""
+        self.evaluator.calibration = cal
+        self.front = []
 
     # ---------------------------------------------------------- offline ---
     def build_pareto(self, ctx: Optional[ResourceContext] = None,

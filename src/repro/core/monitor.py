@@ -106,3 +106,31 @@ def dvfs_spike_trace(n: int = 10) -> Iterator[ResourceContext]:
         derate = 0.55 if n // 3 <= i < 2 * n // 3 else 1.0
         yield ResourceContext(time_s=float(i), cpu_temp_derate=derate,
                               competing_procs=2 if derate < 1 else 0)
+
+
+# ------------------------------------------- per-device trace plumbing -----
+def shape_context(ctx: ResourceContext, *, battery_scale: float = 1.0,
+                  mem_scale: float = 1.0, derate_floor: float = 0.0,
+                  chips: Optional[int] = None,
+                  extra_procs: int = 0) -> ResourceContext:
+    """Project a fleet-wide context onto one device's resource envelope.
+
+    A shared scenario (the case-study day) hits every device, but each
+    device has its own battery capacity, memory headroom and DVFS floor —
+    the same evening drains a small phone's battery faster than a plugged
+    edge server's."""
+    return dataclasses.replace(
+        ctx,
+        battery_frac=min(1.0, max(0.0, ctx.battery_frac * battery_scale)),
+        mem_free_frac=min(1.0, max(0.02, ctx.mem_free_frac * mem_scale)),
+        cpu_temp_derate=max(derate_floor, ctx.cpu_temp_derate),
+        chips_available=(chips if chips is not None else ctx.chips_available),
+        competing_procs=ctx.competing_procs + extra_procs)
+
+
+def shaped_trace(base: Iterator[ResourceContext], **envelope
+                 ) -> Iterator[ResourceContext]:
+    """Map ``shape_context`` over a base trace — the monitor-level hook the
+    fleet registry uses to derive per-device traces from one scenario."""
+    for ctx in base:
+        yield shape_context(ctx, **envelope)

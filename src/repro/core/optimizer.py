@@ -26,8 +26,8 @@ from repro.offload.placer import DEVICE_POOLS, place_dp
 
 from .actions import Action, OffloadChoice
 from .monitor import ResourceContext
-from .profiler import (HardwareProfile, TPU_V5E, estimate_energy,
-                       estimate_latency, layer_costs)
+from .profiler import (Calibration, HardwareProfile, TPU_V5E,
+                       estimate_energy, estimate_latency, layer_costs)
 
 
 @dataclass
@@ -48,12 +48,14 @@ class ActionEvaluator:
 
     def __init__(self, cfg: ModelConfig, shape: InputShape,
                  hw: HardwareProfile = TPU_V5E, base_accuracy: float = 0.76,
-                 measured: Optional[Dict[VariantSpec, float]] = None):
+                 measured: Optional[Dict[VariantSpec, float]] = None,
+                 calibration: Optional[Calibration] = None):
         self.cfg = cfg
         self.shape = shape
         self.hw = hw
         self.base_accuracy = base_accuracy
         self.measured = measured or {}
+        self.calibration = calibration
         self._full = variant_cost(cfg, VariantSpec(), shape.seq_len)
 
     def _variant_cfg(self, spec: VariantSpec) -> ModelConfig:
@@ -78,7 +80,11 @@ class ActionEvaluator:
         a -= 0.10 * ctx.data_drift        # unmitigated drift cost
         return max(a, 0.0)
 
-    def evaluate(self, action: Action, ctx: ResourceContext) -> Evaluation:
+    def evaluate(self, action: Action, ctx: ResourceContext,
+                 calibrate: bool = True) -> Evaluation:
+        """Evaluate an action.  ``calibrate=False`` yields the raw analytic
+        prediction even when a telemetry ``Calibration`` is installed —
+        telemetry stores need the uncorrected value to fit against."""
         cfg = self._variant_cfg(action.variant)
         decode = self.shape.is_decode
         costs = layer_costs(cfg, self.shape.global_batch, self.shape.seq_len,
@@ -126,6 +132,10 @@ class ActionEvaluator:
                 mem = pl.per_device_mem[0]
             except ValueError:
                 lat = float("inf")
+        if calibrate and self.calibration is not None \
+                and not action.offload.enabled:
+            lat = self.calibration.latency(lat)
+            energy = self.calibration.energy(energy)
         return Evaluation(accuracy=self.accuracy_of(action.variant, ctx),
                           energy_j=energy, latency_s=lat, memory_bytes=mem,
                           action=action)

@@ -53,6 +53,28 @@ MOBILE_CPU = HardwareProfile(
     sigma=(1.0, 6.0, 200.0, 0.0), lam=(1.0, 6.0, 200.0))
 
 
+# ------------------------------------------------- measurement calibration --
+@dataclass(frozen=True)
+class Calibration:
+    """Back-end→front-end feedback: an affine correction mapping the
+    analytical Eq.(1)/(2) estimates onto *observed* step measurements.
+
+    Produced by ``repro.fleet.telemetry`` from runtime telemetry and
+    installed into the profiler/optimizer (the loop the paper centers on:
+    "feeding back runtime performance from the back-end level to the
+    front-end level optimization decision")."""
+    latency_scale: float = 1.0
+    latency_bias_s: float = 0.0
+    energy_scale: float = 1.0
+    samples: int = 0
+
+    def latency(self, pred_s: float) -> float:
+        return max(self.latency_scale * pred_s + self.latency_bias_s, 1e-12)
+
+    def energy(self, pred_j: float) -> float:
+        return max(self.energy_scale * pred_j, 0.0)
+
+
 # ---------------------------------------------------- per-layer cost model --
 @dataclass
 class LayerCost:
@@ -142,7 +164,9 @@ def estimate_energy(costs: List[LayerCost], eps: float,
     """Paper Eq. (1): E = Σ σ1·C_l + ε·σ2·M_l + (1-ε)·σ3·M_l + σSM·M_l.
 
     Returned in joules: the σ ratios are anchored so that one MAC at peak
-    utilization costs peak_w / peak_flops joules."""
+    utilization costs peak_w / peak_flops joules.  Telemetry-learned
+    ``Calibration`` corrections are applied one level up, in
+    ``ActionEvaluator.evaluate`` — a single application point."""
     s1, s2, s3, ssm = hw.sigma
     unit = hw.peak_w / hw.peak_flops      # J per MAC-equivalent
     e = 0.0

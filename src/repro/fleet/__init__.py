@@ -1,0 +1,19 @@
+"""Heterogeneous device-fleet simulation with crowd-shared telemetry
+calibration (the "Crowd" level of CrowdHMTware): a registry of ~15
+platform profiles in three hardware tiers, per-device context traces,
+one co-adaptation loop per device, and a telemetry store that feeds
+observed step timings back into the profiler's estimates — pooled per
+tier so devices learn from each other's measurements."""
+from .controller import (DEFAULT_SHAPE, FleetController, FleetTickRecord)
+from .registry import (DeviceSpec, HEAVY, LIGHT, MEDIUM, PLATFORMS,
+                       PlatformProfile, TIERS, build_fleet, device_trace,
+                       make_device, platforms_by_tier)
+from .report import FleetReport, TierSummary, fleet_report
+from .telemetry import (EwmaLsqCalibrator, MeasurementRecord, TelemetryStore)
+
+__all__ = ["DEFAULT_SHAPE", "FleetController", "FleetTickRecord",
+           "DeviceSpec", "HEAVY", "LIGHT", "MEDIUM", "PLATFORMS",
+           "PlatformProfile", "TIERS", "build_fleet", "device_trace",
+           "make_device", "platforms_by_tier", "FleetReport", "TierSummary",
+           "fleet_report", "EwmaLsqCalibrator", "MeasurementRecord",
+           "TelemetryStore"]

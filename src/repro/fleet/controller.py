@@ -1,0 +1,247 @@
+"""FleetController: one co-adaptation loop per device, crowd-calibrated.
+
+Runs the paper's monitor→profiler→optimizer→apply loop for every device
+in a heterogeneous fleet over interleaved per-device context traces.
+Each tick produces a (predicted, observed) measurement pair; telemetry
+fits per-tier corrections and the controller pushes them back into every
+same-tier loop's evaluator — back-end measurements steering front-end
+decisions, across devices.
+
+Observations come from either (a) the device's latent ground-truth bias
+(simulated silicon, default) or (b) a real :class:`ServingEngine`
+attached to the device, whose measured step wall-times become the
+observed latencies (see ``attach_engine``).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.core.actions import Action
+from repro.core.loop import AdaptationLoop, Decision
+from repro.core.monitor import ResourceContext
+from repro.core.optimizer import Budgets
+from repro.models.configs import InputShape, ModelConfig
+
+from .registry import DeviceSpec, device_trace
+from .telemetry import MeasurementRecord, TelemetryStore
+
+DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
+
+
+@dataclass
+class FleetTickRecord:
+    """What one device did and what it cost on one fleet tick."""
+    device_id: str
+    tier: str
+    tick: int
+    ctx: ResourceContext
+    decision: Decision
+    predicted_raw_s: float        # uncalibrated analytic estimate
+    predicted_s: float            # what the optimizer believed (calibrated)
+    observed_s: float             # measured (simulated silicon or engine)
+    observed_energy_j: float
+    sla_s: float
+    violated: bool
+
+
+@dataclass
+class _DeviceRuntime:
+    spec: DeviceSpec
+    loop: AdaptationLoop
+    trace: Iterator[ResourceContext]
+    rng: random.Random
+    sla_s: float
+    engine: object = None         # optional ServingEngine
+    engine_steps: int = 4
+    exhausted: bool = False
+
+
+class FleetController:
+    """Steps a heterogeneous fleet through shared scenarios, closing the
+    telemetry loop per hardware tier."""
+
+    def __init__(self, fleet: Sequence[DeviceSpec], cfg: ModelConfig,
+                 shape: InputShape = DEFAULT_SHAPE, *,
+                 budget_margin: float = 1.5,
+                 share_calibration: bool = True,
+                 warmup_ticks: int = 6,
+                 recalibrate_every: int = 2,
+                 observation_noise: float = 0.03,
+                 allow_offload: bool = False,
+                 trace_ticks: int = 24,
+                 trace_factory=None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.shape = shape
+        self.telemetry = TelemetryStore()
+        self.share_calibration = share_calibration
+        self.warmup_ticks = warmup_ticks
+        self.recalibrate_every = recalibrate_every
+        self.observation_noise = observation_noise
+        self.records: List[FleetTickRecord] = []
+        self._tick = 0
+        self._budget_margin = budget_margin
+        self._devices: Dict[str, _DeviceRuntime] = {}
+        nominal = ResourceContext()
+        for spec in fleet:
+            loop = AdaptationLoop(
+                cfg=cfg, shape=shape, hw=spec.hw,
+                allow_offload=allow_offload)
+            # per-device SLA: margin × the *raw* full-variant estimate on
+            # this silicon under a nominal context — tight enough that the
+            # profiler's latent optimism causes real violations until the
+            # feedback loop corrects it
+            full = loop.evaluator.evaluate(Action(), nominal, calibrate=False)
+            sla = budget_margin * full.latency_s
+            loop.budgets = Budgets(
+                latency_s=sla,
+                memory_bytes=spec.hw.hbm_bytes * spec.chips)
+            trace = (trace_factory(spec, trace_ticks) if trace_factory
+                     else device_trace(spec, trace_ticks))
+            self._devices[spec.device_id] = _DeviceRuntime(
+                spec=spec, loop=loop, trace=iter(trace),
+                rng=random.Random(seed * 7919 + spec.trace_seed),
+                sla_s=sla)
+
+    # ----------------------------------------------------------- plumbing --
+    @property
+    def devices(self) -> List[DeviceSpec]:
+        return [d.spec for d in self._devices.values()]
+
+    def loop_for(self, device_id: str) -> AdaptationLoop:
+        return self._devices[device_id].loop
+
+    def sla_for(self, device_id: str) -> float:
+        return self._devices[device_id].sla_s
+
+    def set_sla(self, device_id: str, sla_s: float) -> None:
+        """Override a device's latency SLA (e.g. an externally mandated
+        budget for an engine-backed device whose real step times live on
+        a different scale than the analytic estimate)."""
+        d = self._devices[device_id]
+        d.sla_s = sla_s
+        d.loop.budgets = Budgets(latency_s=sla_s,
+                                 memory_bytes=d.loop.budgets.memory_bytes)
+
+    def attach_engine(self, device_id: str, engine, steps_per_tick: int = 4
+                      ) -> None:
+        """Back a device with a real ServingEngine: its measured step
+        wall-times replace the simulated observation for that device."""
+        d = self._devices[device_id]
+        d.engine = engine
+        d.engine_steps = steps_per_tick
+
+    # ------------------------------------------------------------ observe --
+    def _observe(self, d: _DeviceRuntime, raw_pred_s: float,
+                 raw_pred_j: float) -> Optional[tuple]:
+        if d.engine is not None:
+            times = []
+            for _ in range(d.engine_steps):
+                if not (any(d.engine._active) or d.engine._queue):
+                    break
+                d.engine.step()
+                times.append(d.engine.step_times[-1])
+            if times:
+                obs_s = sum(times) / len(times)
+                # energy ≈ observed time at the device's sustained power
+                obs_j = obs_s * d.spec.hw.peak_w
+                return obs_s, obs_j
+            # engine idle: no measurement this tick.  Falling back to the
+            # simulated channel would mix wall-clock and analytic scales
+            # in one calibrator and fake SLA violations.
+            return None
+        eps = d.rng.gauss(0.0, self.observation_noise)
+        eps = max(-0.5, min(0.5, eps))
+        obs_s = raw_pred_s * d.spec.latent_latency_factor * (1.0 + eps)
+        eps_e = d.rng.gauss(0.0, self.observation_noise)
+        obs_j = raw_pred_j * d.spec.latent_energy_factor * (1.0 + eps_e)
+        return obs_s, obs_j
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> List[FleetTickRecord]:
+        """One fleet tick: every device advances its trace by one context,
+        adapts, executes (simulated or engine-backed), reports telemetry."""
+        self._tick += 1
+        out: List[FleetTickRecord] = []
+        for d in self._devices.values():
+            try:
+                ctx = next(d.trace)
+            except StopIteration:
+                d.exhausted = True
+                continue
+            decision = d.loop.tick(ctx)
+            raw = d.loop.evaluator.evaluate(decision.action, ctx,
+                                            calibrate=False)
+            obs = self._observe(d, raw.latency_s, raw.energy_j)
+            if obs is None:
+                continue
+            obs_s, obs_j = obs
+            self.telemetry.record(MeasurementRecord(
+                device_id=d.spec.device_id, tier=d.spec.tier,
+                tick=self._tick,
+                predicted_latency_s=raw.latency_s,
+                observed_latency_s=obs_s,
+                predicted_energy_j=raw.energy_j,
+                observed_energy_j=obs_j))
+            rec = FleetTickRecord(
+                device_id=d.spec.device_id, tier=d.spec.tier,
+                tick=self._tick, ctx=ctx, decision=decision,
+                predicted_raw_s=raw.latency_s,
+                predicted_s=decision.eval.latency_s,
+                observed_s=obs_s, observed_energy_j=obs_j,
+                sla_s=d.sla_s, violated=obs_s > d.sla_s)
+            self.records.append(rec)
+            out.append(rec)
+        if self._tick >= self.warmup_ticks \
+                and (self._tick - self.warmup_ticks) \
+                % self.recalibrate_every == 0:
+            self.recalibrate()
+        return out
+
+    def run(self, ticks: int) -> List[FleetTickRecord]:
+        out = []
+        for _ in range(ticks):
+            if all(d.exhausted for d in self._devices.values()):
+                break
+            out.extend(self.step())
+        return out
+
+    # -------------------------------------------------------- calibration --
+    def recalibrate(self) -> None:
+        """Push telemetry-fitted corrections back into every loop — tier-
+        pooled (crowd-shared) or per-device."""
+        for d in self._devices.values():
+            if self.share_calibration:
+                cal = self.telemetry.calibration_for_tier(d.spec.tier)
+            else:
+                cal = self.telemetry.calibration_for_device(
+                    d.spec.device_id)
+            if cal.samples:
+                d.loop.set_calibration(cal)
+
+    def calibration_of(self, device_id: str):
+        return self._devices[device_id].loop.evaluator.calibration
+
+    # ------------------------------------------------------------ queries --
+    def probe_loop(self, spec: DeviceSpec) -> AdaptationLoop:
+        """A fresh loop for this device class — no decision history, same
+        SLA recipe as ``__init__``, carrying only the tier's crowd-learned
+        calibration.  What a brand-new fleet member would decide with."""
+        loop = AdaptationLoop(cfg=self.cfg, shape=self.shape, hw=spec.hw,
+                              allow_offload=False)
+        full = loop.evaluator.evaluate(Action(), ResourceContext(),
+                                       calibrate=False)
+        loop.budgets = Budgets(
+            latency_s=self._budget_margin * full.latency_s,
+            memory_bytes=spec.hw.hbm_bytes * spec.chips)
+        loop.set_calibration(
+            self.telemetry.calibration_for_tier(spec.tier))
+        return loop
+
+    def violations(self, tier: Optional[str] = None,
+                   first_tick: int = 0, last_tick: int = 10 ** 9) -> int:
+        return sum(1 for r in self.records
+                   if r.violated and first_tick <= r.tick <= last_tick
+                   and (tier is None or r.tier == tier))

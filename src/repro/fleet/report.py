@@ -1,0 +1,101 @@
+"""Fleet-wide rollups: per-tier SLA/violation/energy + calibration gain.
+
+Turns a :class:`FleetController` run into the numbers the paper reports
+per platform class — latency distributions, SLA violation rates, energy
+totals — plus the before/after prediction error (MAPE) that quantifies
+what the crowd-telemetry feedback loop bought.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from .controller import FleetController
+
+
+@dataclass
+class TierSummary:
+    tier: str
+    devices: int
+    ticks: int
+    mean_latency_s: float
+    p95_latency_s: float
+    violations: int
+    violation_rate: float
+    energy_j: float
+    mape_before: float            # raw analytic predictions vs observed
+    mape_after: float             # calibrated predictions vs observed
+
+
+@dataclass
+class FleetReport:
+    tiers: List[TierSummary]
+    total_ticks: int
+    total_violations: int
+    total_energy_j: float
+    violations_first_half: int
+    violations_second_half: int
+
+    def render(self) -> str:
+        hdr = (f"{'tier':8s} {'dev':>4s} {'ticks':>6s} {'mean_lat':>10s} "
+               f"{'p95_lat':>10s} {'viol':>5s} {'rate':>6s} "
+               f"{'energy_J':>10s} {'MAPE_raw':>9s} {'MAPE_cal':>9s}")
+        lines = [hdr, "-" * len(hdr)]
+        for t in self.tiers:
+            lines.append(
+                f"{t.tier:8s} {t.devices:4d} {t.ticks:6d} "
+                f"{t.mean_latency_s:10.4g} {t.p95_latency_s:10.4g} "
+                f"{t.violations:5d} {t.violation_rate:6.1%} "
+                f"{t.energy_j:10.4g} {t.mape_before:9.1%} "
+                f"{t.mape_after:9.1%}")
+        lines.append(
+            f"total: ticks={self.total_ticks} "
+            f"violations={self.total_violations} "
+            f"(1st half {self.violations_first_half} → "
+            f"2nd half {self.violations_second_half}) "
+            f"energy={self.total_energy_j:.4g} J")
+        return "\n".join(lines)
+
+
+def _mape_after(ctl: FleetController, tier: str) -> float:
+    """Calibrated error uses the correction each device's loop would
+    actually consult — tier-pooled under crowd sharing, per-device
+    otherwise."""
+    if ctl.share_calibration:
+        return ctl.telemetry.mape(
+            tier=tier,
+            calibration=ctl.telemetry.calibration_for_tier(tier))
+    return ctl.telemetry.mape(tier=tier, per_device_calibration=True)
+
+
+def fleet_report(ctl: FleetController) -> FleetReport:
+    recs = ctl.records
+    tiers = sorted({r.tier for r in recs})
+    summaries = []
+    for tier in tiers:
+        rs = [r for r in recs if r.tier == tier]
+        lats = np.array([r.observed_s for r in rs])
+        viol = sum(1 for r in rs if r.violated)
+        summaries.append(TierSummary(
+            tier=tier,
+            devices=len({r.device_id for r in rs}),
+            ticks=len(rs),
+            mean_latency_s=float(lats.mean()) if len(lats) else 0.0,
+            p95_latency_s=float(np.percentile(lats, 95)) if len(lats)
+            else 0.0,
+            violations=viol,
+            violation_rate=viol / max(len(rs), 1),
+            energy_j=float(sum(r.observed_energy_j for r in rs)),
+            mape_before=ctl.telemetry.mape(tier=tier),
+            mape_after=_mape_after(ctl, tier)))
+    max_tick = max((r.tick for r in recs), default=0)
+    mid = max_tick // 2
+    return FleetReport(
+        tiers=summaries,
+        total_ticks=len(recs),
+        total_violations=sum(1 for r in recs if r.violated),
+        total_energy_j=float(sum(r.observed_energy_j for r in recs)),
+        violations_first_half=ctl.violations(last_tick=mid),
+        violations_second_half=ctl.violations(first_tick=mid + 1))

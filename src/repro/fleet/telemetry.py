@@ -1,0 +1,157 @@
+"""Crowd telemetry: measurement records + prediction calibration.
+
+This is the feedback path the paper names as the key open challenge —
+"feeding back runtime performance from the back-end level to the
+front-end level optimization decision".  Devices report (predicted,
+observed) latency/energy pairs per adaptation tick; the store fits an
+affine correction per hardware tier (EWMA ratio while samples are
+scarce, windowed least squares once enough accumulate) and hands back
+:class:`repro.core.profiler.Calibration` objects the optimizer's
+``ActionEvaluator`` applies to every subsequent estimate.
+
+Tier-level pooling is the crowd-knowledge transfer: a freshly joined
+pixel_6 benefits immediately from measurements contributed by every
+other light-tier phone, before it has produced a single sample itself.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.profiler import Calibration
+
+
+@dataclass(frozen=True)
+class MeasurementRecord:
+    """One back-end observation of one adaptation-loop decision."""
+    device_id: str
+    tier: str
+    tick: int
+    predicted_latency_s: float       # raw analytic estimate (uncalibrated)
+    observed_latency_s: float
+    predicted_energy_j: float
+    observed_energy_j: float
+    tokens: int = 0
+
+
+class EwmaLsqCalibrator:
+    """Affine latency correction + ratio energy correction.
+
+    Cold start: an EWMA of the observed/predicted ratio (bias-only, robust
+    from the very first sample).  Warm: least-squares fit of
+    ``observed ≈ a·predicted + b`` over a sliding window, which also
+    captures fixed per-step overheads (dispatch, cache swaps) that a pure
+    ratio cannot."""
+
+    def __init__(self, window: int = 64, alpha: float = 0.3,
+                 min_lsq_samples: int = 8):
+        self.window = window
+        self.alpha = alpha
+        self.min_lsq_samples = min_lsq_samples
+        self._lat: Deque[Tuple[float, float]] = deque(maxlen=window)
+        self._ratio_lat = 1.0
+        self._ratio_en = 1.0
+        self._n = 0
+
+    def observe(self, pred_lat: float, obs_lat: float,
+                pred_en: float, obs_en: float) -> None:
+        if pred_lat <= 0 or obs_lat <= 0:
+            return
+        self._lat.append((pred_lat, obs_lat))
+        r = obs_lat / pred_lat
+        a = self.alpha
+        self._ratio_lat = (1 - a) * self._ratio_lat + a * r if self._n \
+            else r
+        if pred_en > 0 and obs_en > 0:
+            re = obs_en / pred_en
+            self._ratio_en = (1 - a) * self._ratio_en + a * re if self._n \
+                else re
+        self._n += 1
+
+    @property
+    def samples(self) -> int:
+        return self._n
+
+    def calibration(self) -> Calibration:
+        scale, bias = self._ratio_lat, 0.0
+        if len(self._lat) >= self.min_lsq_samples:
+            p = np.array([x for x, _ in self._lat])
+            o = np.array([y for _, y in self._lat])
+            # degenerate spread (all predictions identical) → ratio only
+            if float(p.std()) > 1e-9 * max(float(p.mean()), 1e-30):
+                A = np.stack([p, np.ones_like(p)], axis=1)
+                (a, b), *_ = np.linalg.lstsq(A, o, rcond=None)
+                # accept the affine fit only if it actually beats the
+                # ratio on the window — outliers (compile spikes, load
+                # bursts) can drive LSQ to wild slopes/negative intercepts
+                if a > 0:
+                    lsq_err = np.mean(np.abs(np.maximum(a * p + b, 1e-12)
+                                             - o) / o)
+                    ratio_err = np.mean(np.abs(self._ratio_lat * p - o) / o)
+                    if lsq_err < ratio_err:
+                        scale, bias = float(a), float(b)
+        return Calibration(latency_scale=scale, latency_bias_s=bias,
+                           energy_scale=self._ratio_en, samples=self._n)
+
+
+class TelemetryStore:
+    """Fleet-wide record store with per-tier (crowd-shared) and per-device
+    calibrators."""
+
+    def __init__(self, window: int = 64, alpha: float = 0.3,
+                 min_lsq_samples: int = 8):
+        self._kw = dict(window=window, alpha=alpha,
+                        min_lsq_samples=min_lsq_samples)
+        self.records: List[MeasurementRecord] = []
+        self._by_tier: Dict[str, EwmaLsqCalibrator] = {}
+        self._by_device: Dict[str, EwmaLsqCalibrator] = {}
+
+    # ------------------------------------------------------------ intake --
+    def record(self, rec: MeasurementRecord) -> None:
+        self.records.append(rec)
+        for key, table in ((rec.tier, self._by_tier),
+                           (rec.device_id, self._by_device)):
+            if key not in table:
+                table[key] = EwmaLsqCalibrator(**self._kw)
+            table[key].observe(rec.predicted_latency_s,
+                               rec.observed_latency_s,
+                               rec.predicted_energy_j,
+                               rec.observed_energy_j)
+
+    # ----------------------------------------------------------- lookup ---
+    def calibration_for_tier(self, tier: str) -> Calibration:
+        c = self._by_tier.get(tier)
+        return c.calibration() if c else Calibration()
+
+    def calibration_for_device(self, device_id: str) -> Calibration:
+        c = self._by_device.get(device_id)
+        return c.calibration() if c else Calibration()
+
+    # ------------------------------------------------------------ errors --
+    def mape(self, tier: Optional[str] = None,
+             calibration: Optional[Calibration] = None,
+             per_device_calibration: bool = False,
+             since_tick: int = 0) -> float:
+        """Mean absolute percentage error of latency predictions vs
+        observations.  With ``calibration`` the stored *raw* predictions
+        are corrected first — so before/after MAPE under the same record
+        set isolates exactly what the feedback loop bought.  With
+        ``per_device_calibration`` each record instead uses its own
+        device's fitted correction (the non-crowd-shared regime)."""
+        errs = []
+        for r in self.records:
+            if tier is not None and r.tier != tier:
+                continue
+            if r.tick < since_tick or r.observed_latency_s <= 0:
+                continue
+            pred = r.predicted_latency_s
+            if per_device_calibration:
+                pred = self.calibration_for_device(r.device_id).latency(pred)
+            elif calibration is not None:
+                pred = calibration.latency(pred)
+            errs.append(abs(pred - r.observed_latency_s)
+                        / r.observed_latency_s)
+        return float(np.mean(errs)) if errs else float("nan")

@@ -11,8 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,6 +71,12 @@ class ServingEngine:
         self._jit_prefill = None  # shapes vary; built per prompt bucket
         self._prefill_cache: Dict[int, Callable] = {}
         self.generation = 0
+        # telemetry: wall-time of recent steps (bounded — engines are
+        # long-lived); optional sink called with (step_seconds,
+        # tokens_emitted, generation) — the back-end→front-end feedback
+        # channel the fleet's TelemetryStore subscribes to.
+        self.step_times: Deque[float] = deque(maxlen=2048)
+        self.on_step: Optional[Callable[[float, int, int], None]] = None
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -94,7 +102,17 @@ class ServingEngine:
             if self._active[slot] is not None or not self._queue:
                 continue
             req = self._queue.pop(0)
+            if len(req.generated) >= req.max_new_tokens:
+                # re-queued after a swap with its budget already spent (or
+                # submitted with max_new_tokens=0): emitting another prefill
+                # token would overshoot the budget and double-count it.
+                req.done = True
+                continue
             bucket = self._bucket(len(req.prompt))
+            if len(req.prompt) > bucket:
+                # prompt exceeds max_seq (e.g. a swap re-queue whose prompt
+                # grew by the generated prefix): keep the newest context
+                req.prompt = req.prompt[-bucket:]
             toks = np.zeros((1, bucket), np.int32)
             toks[0, bucket - len(req.prompt):] = req.prompt  # left-pad
             cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
@@ -103,14 +121,20 @@ class ServingEngine:
             self._caches[slot] = cache
             nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
             req.generated.append(nxt)
-            self._active[slot] = req
             self.stats.prefills += 1
             self.stats.tokens_out += 1
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True      # prefill token completed the budget
+            else:
+                self._active[slot] = req
 
     def step(self) -> int:
         """One engine tick: admit waiting requests, decode one token for
         every active slot.  Returns number of tokens emitted."""
         self._admit()
+        # time only the decode sweep: prefill/compile costs would otherwise
+        # masquerade as decode-step latency in the telemetry channel
+        t0 = time.perf_counter()
         emitted = 0
         for slot, req in enumerate(self._active):
             if req is None:
@@ -128,6 +152,10 @@ class ServingEngine:
                 self._active[slot] = None
         self.stats.steps += 1
         self.stats.tokens_out += emitted
+        dt = time.perf_counter() - t0
+        self.step_times.append(dt)
+        if self.on_step is not None:
+            self.on_step(dt, emitted, self.generation)
         return emitted
 
     def drain(self, max_steps: int = 10_000) -> None:

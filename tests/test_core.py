@@ -2,9 +2,11 @@
 adaptation loop behavior under context traces."""
 import dataclasses
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_config

@@ -1,11 +1,12 @@
 """Engine: memory planner (property-based), remat ladder, quantization,
 fusion accounting, parallel plan bounds."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.configs import get_config

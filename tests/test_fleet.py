@@ -1,0 +1,198 @@
+"""Fleet subsystem: trace determinism, registry, telemetry calibration,
+and the FleetController's crowd-shared feedback loop."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (Calibration, ResourceContext, case_study_trace,
+                        constant_trace, dvfs_spike_trace, shape_context)
+from repro.fleet import (FleetController, HEAVY, LIGHT, MEDIUM, PLATFORMS,
+                         TIERS, EwmaLsqCalibrator, TelemetryStore,
+                         build_fleet, device_trace, fleet_report,
+                         make_device)
+from repro.fleet.telemetry import MeasurementRecord
+from repro.models.configs import InputShape
+
+CFG = get_config("paper-backbone")
+SHAPE = InputShape("fleet_t", 256, 4, "prefill")
+
+
+# ------------------------------------------------------ trace determinism --
+def test_case_study_trace_deterministic_under_seed():
+    a = list(case_study_trace(24, seed=3))
+    b = list(case_study_trace(24, seed=3))
+    assert a == b
+    c = list(case_study_trace(24, seed=4))
+    assert a != c
+
+
+def test_dvfs_spike_trace_deterministic():
+    a = list(dvfs_spike_trace(10))
+    b = list(dvfs_spike_trace(10))
+    assert a == b
+    derates = [ctx.cpu_temp_derate for ctx in a]
+    assert min(derates) < 1.0 and derates[0] == 1.0 and derates[-1] == 1.0
+
+
+def test_shape_context_respects_envelope():
+    ctx = ResourceContext(battery_frac=0.8, mem_free_frac=0.9,
+                          cpu_temp_derate=0.5)
+    shaped = shape_context(ctx, battery_scale=0.5, mem_scale=0.5,
+                           derate_floor=0.7, chips=2, extra_procs=1)
+    assert shaped.battery_frac == pytest.approx(0.4)
+    assert shaped.mem_free_frac == pytest.approx(0.45)
+    assert shaped.cpu_temp_derate == 0.7          # floored
+    assert shaped.chips_available == 2
+    assert shaped.competing_procs == 1
+
+
+# --------------------------------------------------------------- registry --
+def test_registry_spans_three_tiers_with_15_platforms():
+    assert len(PLATFORMS) == 15
+    for tier in TIERS:
+        assert any(p.tier == tier for p in PLATFORMS.values())
+
+
+def test_build_fleet_deterministic_and_heterogeneous():
+    a = build_fleet(12, seed=0)
+    b = build_fleet(12, seed=0)
+    assert [d.device_id for d in a] == [d.device_id for d in b]
+    assert [d.latent_latency_factor for d in a] \
+        == [d.latent_latency_factor for d in b]
+    assert {d.tier for d in a} == set(TIERS)
+    # small fleets interleave tiers too
+    assert {d.tier for d in build_fleet(3, seed=0)} == set(TIERS)
+
+
+def test_device_trace_deterministic_and_enveloped():
+    spec = make_device("cortex_a55_quad", 0, seed=1)
+    a = list(device_trace(spec, 12))
+    b = list(device_trace(spec, 12))
+    assert a == b
+    assert all(ctx.cpu_temp_derate >= spec.dvfs_floor for ctx in a)
+    assert all(ctx.chips_available == spec.chips for ctx in a)
+
+
+# -------------------------------------------------------------- telemetry --
+def test_calibrator_recovers_affine_truth():
+    cal = EwmaLsqCalibrator(min_lsq_samples=8)
+    rng = np.random.default_rng(0)
+    for _ in range(32):
+        p = float(rng.uniform(0.5, 2.0))
+        o = 1.4 * p + 0.1
+        cal.observe(p, o, p, 1.2 * p)
+    c = cal.calibration()
+    assert c.latency_scale == pytest.approx(1.4, rel=0.05)
+    assert c.latency_bias_s == pytest.approx(0.1, rel=0.1)
+    assert c.energy_scale == pytest.approx(1.2, rel=0.05)
+    assert c.latency(1.0) == pytest.approx(1.5, rel=0.05)
+
+
+def test_telemetry_mape_drops_with_calibration():
+    store = TelemetryStore()
+    rng = np.random.default_rng(1)
+    for i in range(40):
+        p = float(rng.uniform(0.1, 1.0))
+        store.record(MeasurementRecord(
+            device_id="d0", tier=LIGHT, tick=i,
+            predicted_latency_s=p, observed_latency_s=1.6 * p,
+            predicted_energy_j=p, observed_energy_j=1.5 * p))
+    before = store.mape(tier=LIGHT)
+    after = store.mape(tier=LIGHT,
+                       calibration=store.calibration_for_tier(LIGHT))
+    assert before > 0.3
+    assert after < 0.05 < before
+
+
+# ------------------------------------------------------- fleet controller --
+@pytest.fixture(scope="module")
+def fleet_run():
+    fleet = build_fleet(12, seed=0)
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=24)
+    ctl.run(24)
+    return ctl
+
+
+def test_violations_decrease_after_calibration_warmup(fleet_run):
+    ctl = fleet_run
+    rep = fleet_report(ctl)
+    assert rep.violations_second_half < rep.violations_first_half
+
+
+def test_calibration_reduces_prediction_error(fleet_run):
+    rep = fleet_report(fleet_run)
+    for t in rep.tiers:
+        assert not math.isnan(t.mape_before)
+        assert t.mape_after < t.mape_before
+
+
+def test_same_tier_devices_share_calibration(fleet_run):
+    ctl = fleet_run
+    by_tier = {}
+    for spec in ctl.devices:
+        by_tier.setdefault(spec.tier, []).append(spec.device_id)
+    cals = {}
+    for tier, ids in by_tier.items():
+        assert len(ids) >= 2, f"fleet should have ≥2 {tier} devices"
+        tier_cals = [ctl.calibration_of(i) for i in ids]
+        assert all(c is not None for c in tier_cals)
+        assert all(c == tier_cals[0] for c in tier_cals), \
+            f"{tier} devices diverged: {tier_cals}"
+        cals[tier] = tier_cals[0]
+    # ...but the *tiers* learned different corrections
+    scales = [c.latency_scale for c in cals.values()]
+    assert len({round(s, 3) for s in scales}) == len(scales)
+
+
+def test_per_device_calibration_when_sharing_disabled():
+    fleet = build_fleet(6, seed=0)
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=16,
+                          share_calibration=False, warmup_ticks=4)
+    ctl.run(16)
+    same_tier = [d for d in fleet if d.tier == HEAVY]
+    assert len(same_tier) >= 2
+    c0 = ctl.calibration_of(same_tier[0].device_id)
+    c1 = ctl.calibration_of(same_tier[1].device_id)
+    assert c0 != c1                    # each learned its own silicon
+
+
+def test_tier_decisions_diverge_for_same_context(fleet_run):
+    ctl = fleet_run
+    probe = ResourceContext(battery_frac=0.95, mem_free_frac=0.7)
+    chosen = {}
+    for spec in ctl.devices:
+        if spec.tier in chosen:
+            continue
+        chosen[spec.tier] = ctl.probe_loop(spec).tick(probe).action
+    assert len(chosen) == 3
+    assert len(set(chosen.values())) > 1
+
+
+def test_controller_run_is_deterministic():
+    r1 = FleetController(build_fleet(6, seed=0), CFG, SHAPE,
+                         trace_ticks=12, seed=0)
+    r1.run(12)
+    r2 = FleetController(build_fleet(6, seed=0), CFG, SHAPE,
+                         trace_ticks=12, seed=0)
+    r2.run(12)
+    a = [(r.device_id, r.observed_s, r.violated) for r in r1.records]
+    b = [(r.device_id, r.observed_s, r.violated) for r in r2.records]
+    assert a == b
+
+
+# --------------------------------------------------- core calibration hook --
+def test_evaluator_applies_installed_calibration():
+    from repro.core import ActionEvaluator, TPU_V5E
+    from repro.core.actions import Action
+    ev = ActionEvaluator(CFG, SHAPE, TPU_V5E)
+    ctx = ResourceContext()
+    raw = ev.evaluate(Action(), ctx)
+    ev.calibration = Calibration(latency_scale=2.0, latency_bias_s=0.01,
+                                 energy_scale=1.5, samples=10)
+    cal = ev.evaluate(Action(), ctx)
+    assert cal.latency_s == pytest.approx(2.0 * raw.latency_s + 0.01)
+    assert cal.energy_j == pytest.approx(1.5 * raw.energy_j)
+    raw2 = ev.evaluate(Action(), ctx, calibrate=False)
+    assert raw2.latency_s == pytest.approx(raw.latency_s)

@@ -1,0 +1,79 @@
+"""ServingEngine swap_model token accounting: re-queued in-flight
+requests must not overshoot max_new_tokens or double-count tokens_out."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serving import Request, ServingEngine
+
+CFG = get_config("paper-backbone").with_updates(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=300)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(slots=2):
+    return ServingEngine(CFG, PARAMS, slots=slots, max_seq=64)
+
+
+def test_swap_midflight_respects_token_budget():
+    eng = _engine()
+    prompt = np.arange(1, 9, dtype=np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
+    eng.step()                       # prefill token + one decode token
+    assert eng.stats.tokens_out == 2
+    eng.swap_model(CFG, PARAMS, eng.opts)     # re-queues the in-flight copy
+    assert len(eng._queue) == 1
+    requeued = eng._queue[0]
+    eng.drain()
+    assert requeued.done
+    # re-prefill's argmax token completes the budget — exactly, not max+1
+    assert len(requeued.generated) == 3
+    # every generated token counted once across the swap
+    assert eng.stats.tokens_out == 3
+
+
+def test_swap_with_budget_already_spent_emits_nothing():
+    eng = _engine()
+    prompt = np.arange(1, 6, dtype=np.int32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
+    eng.step()                       # generated: prefill + decode = 2 == max
+    # request finished inside step(); nothing in flight survives the swap
+    eng.swap_model(CFG, PARAMS, eng.opts)
+    before = eng.stats.tokens_out
+    eng.drain()
+    assert eng.stats.tokens_out == before == 2
+
+
+def test_zero_budget_request_never_prefills():
+    eng = _engine()
+    eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=0))
+    eng.step()
+    assert eng.stats.tokens_out == 0
+    assert eng.stats.prefills == 0
+    assert not any(eng._active) and not eng._queue
+
+
+def test_prompt_longer_than_max_seq_is_truncated_not_crashed():
+    # covers both a fresh oversized submission and a swap re-queue whose
+    # prompt grew past max_seq by the generated prefix
+    eng = _engine()
+    eng.submit(Request(rid=0, prompt=np.arange(1, 101, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.drain()
+    assert eng.stats.prefills == 1
+    assert eng.stats.tokens_out >= 1
+
+
+def test_step_timing_hook_fires():
+    eng = _engine()
+    seen = []
+    eng.on_step = lambda dt, emitted, gen: seen.append((dt, emitted, gen))
+    eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
+                       max_new_tokens=2))
+    eng.drain()
+    assert len(eng.step_times) == eng.stats.steps == len(seen)
+    assert all(dt > 0 for dt, _, _ in seen)
