@@ -12,7 +12,7 @@ import time
 import traceback
 
 SUITES = ("overall", "dynamic_budgets", "elastic", "offload", "engine",
-          "ablation", "case_study", "tta", "roofline", "fleet")
+          "ablation", "case_study", "tta", "roofline", "fleet", "serving")
 
 
 def main() -> None:

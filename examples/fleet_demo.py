@@ -18,7 +18,7 @@ from repro.configs import get_config
 from repro.fleet import FleetController, build_fleet, fleet_report
 from repro.models.configs import InputShape
 from repro.models.model import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import Request
 
 
 def main() -> None:
@@ -40,17 +40,18 @@ def main() -> None:
                           warmup_ticks=4)
 
     # back one light-tier device with a real engine: measured step times
-    # become its telemetry observations
+    # become its telemetry observations.  build_engine wires it to the
+    # fleet's shared compile cache under the device's platform domain.
     engine_dev = next(d for d in fleet if d.tier == "light")
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=2, max_seq=128)
+    engine = ctl.build_engine(engine_dev.device_id, params, cfg=cfg,
+                              slots=2, max_seq=128, steps_per_tick=3)
     rng = np.random.default_rng(0)
     for i in range(12):
         prompt = rng.integers(0, cfg.vocab_size,
                               size=int(rng.integers(4, 16))).astype(np.int32)
         engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=24))
     engine.step()      # warm up jit compiles so telemetry sees steady state
-    ctl.attach_engine(engine_dev.device_id, engine, steps_per_tick=3)
     ctl.set_sla(engine_dev.device_id, 5e-3)   # 5 ms/step, externally given
     print(f"\nengine-backed device: {engine_dev.device_id} "
           f"(real decode-step wall times feed telemetry)")
@@ -58,12 +59,16 @@ def main() -> None:
     ctl.run(16)
 
     print("\n" + fleet_report(ctl).render())
-    print("\nlearned tier calibrations (observed/predicted):")
+    print("\nlearned tier calibrations (observed/predicted), per channel:")
+    from repro.fleet import CHANNELS
     for tier in ("heavy", "medium", "light"):
-        c = ctl.telemetry.calibration_for_tier(tier)
-        print(f"  {tier:6s} latency ×{c.latency_scale:.2f} "
-              f"{c.latency_bias_s:+.2e}s  energy ×{c.energy_scale:.2f}  "
-              f"({c.samples} samples)")
+        for chan in CHANNELS:
+            c = ctl.telemetry.calibration_for_tier(tier, chan)
+            if not c.samples:
+                continue
+            print(f"  {tier:6s}/{chan:9s} latency ×{c.latency_scale:.2f} "
+                  f"{c.latency_bias_s:+.2e}s  energy ×{c.energy_scale:.2f}  "
+                  f"({c.samples} samples)")
     done = sum(1 for t in engine.step_times)
     print(f"\nengine: {engine.stats.steps} steps, "
           f"{engine.stats.tokens_out} tokens, "

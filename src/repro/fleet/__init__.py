@@ -9,11 +9,12 @@ from .registry import (DeviceSpec, HEAVY, LIGHT, MEDIUM, PLATFORMS,
                        PlatformProfile, TIERS, build_fleet, device_trace,
                        make_device, platforms_by_tier)
 from .report import FleetReport, TierSummary, fleet_report
-from .telemetry import (EwmaLsqCalibrator, MeasurementRecord, TelemetryStore)
+from .telemetry import (CHANNELS, ENGINE, SIMULATED, EwmaLsqCalibrator,
+                        MeasurementRecord, TelemetryStore)
 
 __all__ = ["DEFAULT_SHAPE", "FleetController", "FleetTickRecord",
            "DeviceSpec", "HEAVY", "LIGHT", "MEDIUM", "PLATFORMS",
            "PlatformProfile", "TIERS", "build_fleet", "device_trace",
            "make_device", "platforms_by_tier", "FleetReport", "TierSummary",
-           "fleet_report", "EwmaLsqCalibrator", "MeasurementRecord",
-           "TelemetryStore"]
+           "fleet_report", "CHANNELS", "ENGINE", "SIMULATED",
+           "EwmaLsqCalibrator", "MeasurementRecord", "TelemetryStore"]

@@ -23,9 +23,10 @@ from repro.core.loop import AdaptationLoop, Decision
 from repro.core.monitor import ResourceContext
 from repro.core.optimizer import Budgets
 from repro.models.configs import InputShape, ModelConfig
+from repro.serving import CompileCache
 
 from .registry import DeviceSpec, device_trace
-from .telemetry import MeasurementRecord, TelemetryStore
+from .telemetry import ENGINE, SIMULATED, MeasurementRecord, TelemetryStore
 
 DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
 
@@ -72,10 +73,15 @@ class FleetController:
                  allow_offload: bool = False,
                  trace_ticks: int = 24,
                  trace_factory=None,
+                 compile_cache: Optional[CompileCache] = None,
                  seed: int = 0):
         self.cfg = cfg
         self.shape = shape
         self.telemetry = TelemetryStore()
+        # fleet-level jit-program cache: engine-backed devices of the same
+        # platform share compiled decode/prefill programs through this
+        self.compile_cache = (compile_cache if compile_cache is not None
+                              else CompileCache())
         self.share_calibration = share_calibration
         self.warmup_ticks = warmup_ticks
         self.recalibrate_every = recalibrate_every
@@ -133,13 +139,36 @@ class FleetController:
         d.engine = engine
         d.engine_steps = steps_per_tick
 
+    def build_engine(self, device_id: str, params, *, cfg=None, slots: int = 4,
+                     max_seq: int = 256, opts=None, steps_per_tick: int = 4,
+                     decode_mode: str = "batched"):
+        """Construct and attach a ServingEngine for a device, wired to the
+        fleet's shared compile cache under the device's compile domain —
+        same-platform fleet members reuse each other's jitted decode and
+        prefill programs instead of compiling ~identical ones per device.
+
+        ``cfg`` defaults to the fleet's model config; demos and tests pass
+        a reduced variant so real decode steps stay cheap."""
+        from repro.models.runtime import DEFAULT_OPTIONS
+        from repro.serving import ServingEngine
+        spec = self._devices[device_id].spec
+        engine = ServingEngine(
+            cfg if cfg is not None else self.cfg, params,
+            slots=slots, max_seq=max_seq,
+            opts=opts if opts is not None else DEFAULT_OPTIONS,
+            decode_mode=decode_mode,
+            compile_cache=self.compile_cache,
+            compile_domain=spec.compile_domain)
+        self.attach_engine(device_id, engine, steps_per_tick)
+        return engine
+
     # ------------------------------------------------------------ observe --
     def _observe(self, d: _DeviceRuntime, raw_pred_s: float,
                  raw_pred_j: float) -> Optional[tuple]:
         if d.engine is not None:
             times = []
             for _ in range(d.engine_steps):
-                if not (any(d.engine._active) or d.engine._queue):
+                if not d.engine.has_work:
                     break
                 d.engine.step()
                 times.append(d.engine.step_times[-1])
@@ -147,7 +176,7 @@ class FleetController:
                 obs_s = sum(times) / len(times)
                 # energy ≈ observed time at the device's sustained power
                 obs_j = obs_s * d.spec.hw.peak_w
-                return obs_s, obs_j
+                return obs_s, obs_j, ENGINE
             # engine idle: no measurement this tick.  Falling back to the
             # simulated channel would mix wall-clock and analytic scales
             # in one calibrator and fake SLA violations.
@@ -157,7 +186,7 @@ class FleetController:
         obs_s = raw_pred_s * d.spec.latent_latency_factor * (1.0 + eps)
         eps_e = d.rng.gauss(0.0, self.observation_noise)
         obs_j = raw_pred_j * d.spec.latent_energy_factor * (1.0 + eps_e)
-        return obs_s, obs_j
+        return obs_s, obs_j, SIMULATED
 
     # --------------------------------------------------------------- step --
     def step(self) -> List[FleetTickRecord]:
@@ -177,14 +206,15 @@ class FleetController:
             obs = self._observe(d, raw.latency_s, raw.energy_j)
             if obs is None:
                 continue
-            obs_s, obs_j = obs
+            obs_s, obs_j, chan = obs
             self.telemetry.record(MeasurementRecord(
                 device_id=d.spec.device_id, tier=d.spec.tier,
                 tick=self._tick,
                 predicted_latency_s=raw.latency_s,
                 observed_latency_s=obs_s,
                 predicted_energy_j=raw.energy_j,
-                observed_energy_j=obs_j))
+                observed_energy_j=obs_j,
+                channel=chan))
             rec = FleetTickRecord(
                 device_id=d.spec.device_id, tier=d.spec.tier,
                 tick=self._tick, ctx=ctx, decision=decision,
@@ -211,13 +241,16 @@ class FleetController:
     # -------------------------------------------------------- calibration --
     def recalibrate(self) -> None:
         """Push telemetry-fitted corrections back into every loop — tier-
-        pooled (crowd-shared) or per-device."""
+        pooled (crowd-shared) or per-device, always on the device's own
+        measurement channel (engine wall-times and simulated silicon live
+        on unrelated scales and must never share a fit)."""
         for d in self._devices.values():
+            chan = ENGINE if d.engine is not None else SIMULATED
             if self.share_calibration:
-                cal = self.telemetry.calibration_for_tier(d.spec.tier)
+                cal = self.telemetry.calibration_for_tier(d.spec.tier, chan)
             else:
                 cal = self.telemetry.calibration_for_device(
-                    d.spec.device_id)
+                    d.spec.device_id, chan)
             if cal.samples:
                 d.loop.set_calibration(cal)
 
@@ -225,10 +258,14 @@ class FleetController:
         return self._devices[device_id].loop.evaluator.calibration
 
     # ------------------------------------------------------------ queries --
-    def probe_loop(self, spec: DeviceSpec) -> AdaptationLoop:
+    def probe_loop(self, spec: DeviceSpec,
+                   channel: str = SIMULATED) -> AdaptationLoop:
         """A fresh loop for this device class — no decision history, same
         SLA recipe as ``__init__``, carrying only the tier's crowd-learned
-        calibration.  What a brand-new fleet member would decide with."""
+        calibration on the probe's measurement ``channel``.  What a
+        brand-new fleet member would decide with.  Under
+        ``share_calibration=False`` there is no crowd transfer, so the
+        probe (like any new member in that regime) starts uncalibrated."""
         loop = AdaptationLoop(cfg=self.cfg, shape=self.shape, hw=spec.hw,
                               allow_offload=False)
         full = loop.evaluator.evaluate(Action(), ResourceContext(),
@@ -236,8 +273,9 @@ class FleetController:
         loop.budgets = Budgets(
             latency_s=self._budget_margin * full.latency_s,
             memory_bytes=spec.hw.hbm_bytes * spec.chips)
-        loop.set_calibration(
-            self.telemetry.calibration_for_tier(spec.tier))
+        if self.share_calibration:
+            loop.set_calibration(
+                self.telemetry.calibration_for_tier(spec.tier, channel))
         return loop
 
     def violations(self, tier: Optional[str] = None,

@@ -149,6 +149,14 @@ class DeviceSpec:
     def wall_powered(self) -> bool:
         return self.battery_wh >= 1e6
 
+    @property
+    def compile_domain(self) -> str:
+        """Namespace for shared jit programs: compiled artifacts are
+        platform/toolchain-specific, so devices of one platform can reuse
+        each other's programs while cross-platform reuse is forbidden.
+        The fleet compile cache keys on this."""
+        return self.platform
+
 
 def make_device(platform: str, index: int, seed: int = 0) -> DeviceSpec:
     """Instantiate device ``index`` of a platform.  The per-unit jitter is

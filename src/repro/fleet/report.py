@@ -25,7 +25,12 @@ class TierSummary:
     violations: int
     violation_rate: float
     energy_j: float
-    mape_before: float            # raw analytic predictions vs observed
+    # raw analytic predictions vs observed, across ALL of the tier's
+    # measurement channels — for a tier mixing engine-backed (wall-time)
+    # and simulated devices this is dominated by the engine records'
+    # genuinely huge raw error, which is exactly the gap the per-channel
+    # calibration (mape_after) closes
+    mape_before: float
     mape_after: float             # calibrated predictions vs observed
 
 
@@ -62,11 +67,9 @@ class FleetReport:
 def _mape_after(ctl: FleetController, tier: str) -> float:
     """Calibrated error uses the correction each device's loop would
     actually consult — tier-pooled under crowd sharing, per-device
-    otherwise."""
+    otherwise — always on the record's own measurement channel."""
     if ctl.share_calibration:
-        return ctl.telemetry.mape(
-            tier=tier,
-            calibration=ctl.telemetry.calibration_for_tier(tier))
+        return ctl.telemetry.mape(tier=tier, per_tier_calibration=True)
     return ctl.telemetry.mape(tier=tier, per_device_calibration=True)
 
 

@@ -12,6 +12,13 @@ scarce, windowed least squares once enough accumulate) and hands back
 Tier-level pooling is the crowd-knowledge transfer: a freshly joined
 pixel_6 benefits immediately from measurements contributed by every
 other light-tier phone, before it has produced a single sample itself.
+
+Pooling is split by **measurement channel**: engine-backed devices
+report real decode-step wall-times, simulated devices report analytic
+latencies scaled by latent silicon bias — two scales that share no
+affine relationship.  Calibrator populations are keyed on
+``(tier, channel)`` (and ``(device, channel)``), so a fleet mixing both
+kinds never cross-contaminates its fits.
 """
 from __future__ import annotations
 
@@ -22,6 +29,11 @@ from typing import Deque, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.profiler import Calibration
+
+# measurement channels: what produced the observation
+SIMULATED = "simulated"     # latent-bias silicon simulation (analytic scale)
+ENGINE = "engine"           # real ServingEngine step wall-times
+CHANNELS = (SIMULATED, ENGINE)
 
 
 @dataclass(frozen=True)
@@ -35,6 +47,7 @@ class MeasurementRecord:
     predicted_energy_j: float
     observed_energy_j: float
     tokens: int = 0
+    channel: str = SIMULATED
 
 
 class EwmaLsqCalibrator:
@@ -98,22 +111,22 @@ class EwmaLsqCalibrator:
 
 
 class TelemetryStore:
-    """Fleet-wide record store with per-tier (crowd-shared) and per-device
-    calibrators."""
+    """Fleet-wide record store with per-(tier, channel) crowd-shared and
+    per-(device, channel) calibrators."""
 
     def __init__(self, window: int = 64, alpha: float = 0.3,
                  min_lsq_samples: int = 8):
         self._kw = dict(window=window, alpha=alpha,
                         min_lsq_samples=min_lsq_samples)
         self.records: List[MeasurementRecord] = []
-        self._by_tier: Dict[str, EwmaLsqCalibrator] = {}
-        self._by_device: Dict[str, EwmaLsqCalibrator] = {}
+        self._by_tier: Dict[Tuple[str, str], EwmaLsqCalibrator] = {}
+        self._by_device: Dict[Tuple[str, str], EwmaLsqCalibrator] = {}
 
     # ------------------------------------------------------------ intake --
     def record(self, rec: MeasurementRecord) -> None:
         self.records.append(rec)
-        for key, table in ((rec.tier, self._by_tier),
-                           (rec.device_id, self._by_device)):
+        for key, table in (((rec.tier, rec.channel), self._by_tier),
+                           ((rec.device_id, rec.channel), self._by_device)):
             if key not in table:
                 table[key] = EwmaLsqCalibrator(**self._kw)
             table[key].observe(rec.predicted_latency_s,
@@ -122,34 +135,57 @@ class TelemetryStore:
                                rec.observed_energy_j)
 
     # ----------------------------------------------------------- lookup ---
-    def calibration_for_tier(self, tier: str) -> Calibration:
-        c = self._by_tier.get(tier)
+    def calibration_for_tier(self, tier: str,
+                             channel: str = SIMULATED) -> Calibration:
+        c = self._by_tier.get((tier, channel))
         return c.calibration() if c else Calibration()
 
-    def calibration_for_device(self, device_id: str) -> Calibration:
-        c = self._by_device.get(device_id)
+    def calibration_for_device(self, device_id: str,
+                               channel: str = SIMULATED) -> Calibration:
+        c = self._by_device.get((device_id, channel))
         return c.calibration() if c else Calibration()
+
+    def device_channel(self, device_id: str) -> str:
+        """The channel a device most recently reported on (a device is
+        either engine-backed or simulated for its whole life, but the
+        store shouldn't have to be told which)."""
+        for r in reversed(self.records):
+            if r.device_id == device_id:
+                return r.channel
+        return SIMULATED
 
     # ------------------------------------------------------------ errors --
     def mape(self, tier: Optional[str] = None,
              calibration: Optional[Calibration] = None,
              per_device_calibration: bool = False,
-             since_tick: int = 0) -> float:
+             per_tier_calibration: bool = False,
+             since_tick: int = 0,
+             channel: Optional[str] = None) -> float:
         """Mean absolute percentage error of latency predictions vs
         observations.  With ``calibration`` the stored *raw* predictions
         are corrected first — so before/after MAPE under the same record
         set isolates exactly what the feedback loop bought.  With
+        ``per_tier_calibration`` each record uses its tier's pooled fit on
+        its own channel (the crowd-shared regime); with
         ``per_device_calibration`` each record instead uses its own
-        device's fitted correction (the non-crowd-shared regime)."""
+        device's fitted correction on its own channel (the
+        non-crowd-shared regime).  ``channel`` restricts the record set to
+        one measurement channel."""
         errs = []
         for r in self.records:
             if tier is not None and r.tier != tier:
+                continue
+            if channel is not None and r.channel != channel:
                 continue
             if r.tick < since_tick or r.observed_latency_s <= 0:
                 continue
             pred = r.predicted_latency_s
             if per_device_calibration:
-                pred = self.calibration_for_device(r.device_id).latency(pred)
+                pred = self.calibration_for_device(
+                    r.device_id, r.channel).latency(pred)
+            elif per_tier_calibration:
+                pred = self.calibration_for_tier(
+                    r.tier, r.channel).latency(pred)
             elif calibration is not None:
                 pred = calibration.latency(pred)
             errs.append(abs(pred - r.observed_latency_s)

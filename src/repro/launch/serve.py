@@ -25,6 +25,8 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--adapt-every", type=int, default=8)
+    ap.add_argument("--decode-mode", default="batched",
+                    choices=["batched", "per_slot"])
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -35,7 +37,8 @@ def main() -> None:
                     budgets=Budgets(latency_s=1.0, memory_bytes=8e9),
                     allow_offload=False)
     engine = ServingEngine(cfg, params, slots=args.slots,
-                           max_seq=args.max_seq)
+                           max_seq=args.max_seq,
+                           decode_mode=args.decode_mode)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):

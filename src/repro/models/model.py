@@ -25,7 +25,8 @@ from .transformer import (_pattern_period, apply_stack, forward, init_params,
 Cache = Dict[str, Any]
 
 __all__ = ["init_params", "forward", "lm_loss", "init_cache", "prefill",
-           "decode_step", "Cache"]
+           "decode_step", "Cache", "init_slot_cache", "write_cache_slot",
+           "greedy_batched_step"]
 
 
 def _n_attn_layers(cfg: ModelConfig) -> int:
@@ -64,6 +65,52 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
         cache["cross_k"] = jnp.zeros(shape, kv_dt)
         cache["cross_v"] = jnp.zeros(shape, kv_dt)
     return cache
+
+
+# ====================================================== slot-stacked cache ==
+# The serving engine holds ONE cache pytree for all of its decode slots:
+# every leaf of a batch=1 cache gains a leading ``(slots,)`` axis, including
+# ``pos`` (each slot sits at its own sequence position).  ``vmap`` over that
+# axis turns the per-sequence decode step into a single batched program, so
+# per-tick decode cost scales with the model, not with the slot count.
+
+def init_slot_cache(cfg: ModelConfig, slots: int, max_seq: int,
+                    opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
+    """A zeroed slot-stacked cache: ``init_cache(cfg, 1, ...)`` leaves with
+    a leading ``(slots,)`` axis."""
+    one = init_cache(cfg, 1, max_seq, opts)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((slots,) + a.shape, a.dtype), one)
+
+
+def write_cache_slot(stacked: Cache, cache: Cache, slot: jax.Array) -> Cache:
+    """Write a batch=1 cache (e.g. a fresh prefill) into slot ``slot`` of a
+    slot-stacked cache.  ``slot`` may be traced, so one compiled program
+    serves every slot index."""
+    return jax.tree_util.tree_map(
+        lambda s, c: jax.lax.dynamic_update_index_in_dim(
+            s, c.astype(s.dtype), slot, 0), stacked, cache)
+
+
+def greedy_batched_step(params: Params, cfg: ModelConfig, cache: Cache,
+                        tokens: jax.Array,
+                        opts: RuntimeOptions = DEFAULT_OPTIONS):
+    """One greedy decode step over a slot-stacked cache.
+
+    tokens: (slots,) int32 — the last emitted token of each slot.  Returns
+    ``(next_tokens (slots,), positions (slots,), new cache)``.  The argmax
+    runs on device, so a serving tick needs a single bulk device→host
+    transfer of ``2 * slots`` scalars instead of one sync per slot.  Each
+    vmapped instance is exactly the batch=1 ``decode_step`` computation, so
+    greedy tokens are bit-identical to the per-slot reference path.
+    """
+    def one(c: Cache, tok: jax.Array):
+        logits, c2 = decode_step(params, cfg, c, tok[None], opts)
+        nxt = jnp.argmax(logits[0, : cfg.vocab_size]).astype(jnp.int32)
+        return (nxt, c2["pos"]), c2
+
+    (nxt, pos), new_cache = jax.vmap(one)(cache, tokens)
+    return nxt, pos, new_cache
 
 
 # =========================================================== decode blocks ==

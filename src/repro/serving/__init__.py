@@ -1,3 +1,6 @@
+from .compile_cache import (CompileCache, GLOBAL_COMPILE_CACHE,
+                            ServePrograms)
 from .engine import Request, ServeStats, ServingEngine
 
-__all__ = ["Request", "ServeStats", "ServingEngine"]
+__all__ = ["CompileCache", "GLOBAL_COMPILE_CACHE", "ServePrograms",
+           "Request", "ServeStats", "ServingEngine"]

@@ -1,0 +1,99 @@
+"""Process-wide cache of jitted serving programs.
+
+A 15-device fleet used to mean ~15 identical decode programs: every
+:class:`~repro.serving.engine.ServingEngine` built its own ``jax.jit``
+wrappers, and jax's compilation cache keys on function identity, so
+nothing was shared.  ``CompileCache`` keys program sets on the things
+that actually determine the compiled artifact — ``(cfg, opts, slots,
+max_seq, domain)`` — and hands the *same* jitted callables to every
+engine that asks, so same-platform fleet members compile once.
+
+``domain`` namespaces otherwise-identical keys by compile target
+(platform/ISA): in a real deployment a pixel_6 cannot reuse a jetson's
+binaries even for the same model, so the fleet controller passes each
+device's :attr:`DeviceSpec.compile_domain` here.
+
+Program set per key:
+
+* ``decode``     — one batched greedy step over the slot-stacked cache
+                   (``greedy_batched_step`` under ``vmap``), with the
+                   cache **donated** so KV/SSM buffers are updated in
+                   place instead of copied every token
+* ``decode_ref`` — the batch=1 reference decode (the per-slot loop path,
+                   kept for equivalence tests and benchmarks)
+* ``write_slot`` — writes a fresh prefill into one slot of the stacked
+                   cache (stacked side donated; slot index traced, so one
+                   program covers every slot)
+* ``prefill(bucket)`` — per-prompt-bucket prefill jits, built lazily
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+
+from repro.models.configs import ModelConfig
+from repro.models.model import (decode_step, greedy_batched_step, prefill,
+                                write_cache_slot)
+from repro.models.runtime import RuntimeOptions
+
+Key = Tuple[ModelConfig, RuntimeOptions, int, int, str]
+
+
+class ServePrograms:
+    """The jitted callables for one (cfg, opts, slots, max_seq, domain)."""
+
+    def __init__(self, cfg: ModelConfig, opts: RuntimeOptions):
+        self._cfg, self._opts = cfg, opts
+        # donate the stacked cache: its buffers are rewritten every token,
+        # so aliasing input→output storage avoids a full cache copy per step
+        self.decode: Callable = jax.jit(
+            lambda p, c, t: greedy_batched_step(p, cfg, c, t, opts),
+            donate_argnums=(1,))
+        self.decode_ref: Callable = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t, opts))
+        self.write_slot: Callable = jax.jit(
+            lambda stacked, c, i: write_cache_slot(stacked, c, i),
+            donate_argnums=(0,))
+        self._prefills: Dict[int, Callable] = {}
+
+    def prefill(self, bucket: int) -> Tuple[Callable, bool]:
+        """The prefill jit for one prompt bucket, plus whether this call
+        created it (a compile the caller should account for)."""
+        fresh = bucket not in self._prefills
+        if fresh:
+            cfg, opts = self._cfg, self._opts
+            self._prefills[bucket] = jax.jit(
+                lambda p, c, t: prefill(p, cfg, t, c, opts))
+        return self._prefills[bucket], fresh
+
+
+class CompileCache:
+    """Shares :class:`ServePrograms` across engines.  Thread-hostile like
+    the rest of the serving layer (one engine loop per process)."""
+
+    def __init__(self):
+        self._entries: Dict[Key, ServePrograms] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def entry_for(self, cfg: ModelConfig, opts: RuntimeOptions, slots: int,
+                  max_seq: int, domain: str = ""
+                  ) -> Tuple[ServePrograms, bool]:
+        key: Key = (cfg, opts, slots, max_seq, domain)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            return entry, False
+        self.misses += 1
+        entry = ServePrograms(cfg, opts)
+        self._entries[key] = entry
+        return entry, True
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+# Engines that aren't handed an explicit cache share this one, so two
+# engines in one process never compile the same program twice.
+GLOBAL_COMPILE_CACHE = CompileCache()

@@ -6,15 +6,32 @@ adaptation loop may swap the model variant or engine options between
 decode steps — the engine re-jits lazily and keeps per-slot caches valid
 only within a variant generation (the paper's "per-second adaptation
 frequency" maps to a generation counter here).
+
+Two decode paths share the scheduler:
+
+* ``decode_mode="batched"`` (default) — ONE slot-stacked cache pytree of
+  shape ``(slots, ...)`` and one jitted decode step per tick.  Greedy
+  argmax happens on device; the tick does a single bulk device→host
+  transfer of ``(slots,)`` tokens + positions, and the stacked cache is
+  *donated* to the step so KV/SSM buffers update in place.  Inactive
+  slots are masked (their outputs ignored), never skipped — the decode
+  shape is constant, so one compiled program serves every occupancy.
+* ``decode_mode="per_slot"`` — the original reference loop: one jit call
+  and one host sync per active slot.  Kept for equivalence tests and as
+  the benchmark baseline; token streams are bit-identical across modes.
+
+Compiled programs come from a :class:`CompileCache` shared across engines
+(process-global by default), so a fleet of same-platform engines compiles
+each program once — ``ServeStats.recompiles`` counts only the programs
+*this* engine's requests actually caused to be built.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +39,10 @@ import numpy as np
 
 from repro.models.configs import ModelConfig
 from repro.models.layers import Params
-from repro.models.model import decode_step, init_cache, prefill
+from repro.models.model import init_cache, init_slot_cache
 from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+
+from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, ServePrograms
 
 
 @dataclass
@@ -55,21 +74,26 @@ class ServingEngine:
     """Slot-based continuous batching over the unified decode API."""
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int = 8,
-                 max_seq: int = 512, opts: RuntimeOptions = DEFAULT_OPTIONS):
+                 max_seq: int = 512, opts: RuntimeOptions = DEFAULT_OPTIONS,
+                 decode_mode: str = "batched",
+                 compile_cache: Optional[CompileCache] = None,
+                 compile_domain: str = ""):
+        if decode_mode not in ("batched", "per_slot"):
+            raise ValueError(f"unknown decode_mode {decode_mode!r}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.opts = opts
+        self.decode_mode = decode_mode
+        self.compile_cache = (compile_cache if compile_cache is not None
+                              else GLOBAL_COMPILE_CACHE)
+        self.compile_domain = compile_domain
         self.stats = ServeStats()
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = deque()
         self._active: List[Optional[Request]] = [None] * slots
-        self._caches = [init_cache(cfg, 1, max_seq, opts)
-                        for _ in range(slots)]
-        self._jit_decode = jax.jit(
-            lambda p, c, t: decode_step(p, cfg, c, t, opts))
-        self._jit_prefill = None  # shapes vary; built per prompt bucket
-        self._prefill_cache: Dict[int, Callable] = {}
+        self._programs: ServePrograms = self._bind_programs()
+        self._reset_caches()
         self.generation = 0
         # telemetry: wall-time of recent steps (bounded — engines are
         # long-lived); optional sink called with (step_seconds,
@@ -78,9 +102,37 @@ class ServingEngine:
         self.step_times: Deque[float] = deque(maxlen=2048)
         self.on_step: Optional[Callable[[float, int, int], None]] = None
 
+    # ------------------------------------------------------------ programs --
+    def _bind_programs(self) -> ServePrograms:
+        entry, fresh = self.compile_cache.entry_for(
+            self.cfg, self.opts, self.slots, self.max_seq,
+            self.compile_domain)
+        if fresh:
+            self.stats.recompiles += 1
+        return entry
+
+    def _prefill_fn(self, bucket: int) -> Callable:
+        fn, fresh = self._programs.prefill(bucket)
+        if fresh:
+            self.stats.recompiles += 1
+        return fn
+
+    def _reset_caches(self) -> None:
+        if self.decode_mode == "batched":
+            self._cache = init_slot_cache(self.cfg, self.slots, self.max_seq,
+                                          self.opts)
+        else:
+            self._caches = [init_cache(self.cfg, 1, self.max_seq, self.opts)
+                            for _ in range(self.slots)]
+
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
         self._queue.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is in flight or waiting."""
+        return any(r is not None for r in self._active) or bool(self._queue)
 
     def _bucket(self, n: int) -> int:
         b = 16
@@ -88,20 +140,12 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_seq)
 
-    def _prefill_fn(self, bucket: int) -> Callable:
-        if bucket not in self._prefill_cache:
-            cfg, opts = self.cfg, self.opts
-            self._prefill_cache[bucket] = jax.jit(
-                lambda p, c, t: prefill(p, cfg, t, c, opts))
-            self.stats.recompiles += 1
-        return self._prefill_cache[bucket]
-
     # ------------------------------------------------------------ stepping --
     def _admit(self) -> None:
         for slot in range(self.slots):
             if self._active[slot] is not None or not self._queue:
                 continue
-            req = self._queue.pop(0)
+            req = self._queue.popleft()
             if len(req.generated) >= req.max_new_tokens:
                 # re-queued after a swap with its budget already spent (or
                 # submitted with max_new_tokens=0): emitting another prefill
@@ -118,30 +162,51 @@ class ServingEngine:
             cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
             logits, cache = self._prefill_fn(bucket)(
                 self.params, cache, jnp.asarray(toks))
-            self._caches[slot] = cache
             nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
             req.generated.append(nxt)
             self.stats.prefills += 1
             self.stats.tokens_out += 1
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True      # prefill token completed the budget
+            elif self.decode_mode == "batched":
+                # the stacked side is donated: the slot write is in place
+                self._cache = self._programs.write_slot(
+                    self._cache, cache, jnp.int32(slot))
+                self._active[slot] = req
             else:
+                self._caches[slot] = cache
                 self._active[slot] = req
 
-    def step(self) -> int:
-        """One engine tick: admit waiting requests, decode one token for
-        every active slot.  Returns number of tokens emitted."""
-        self._admit()
-        # time only the decode sweep: prefill/compile costs would otherwise
-        # masquerade as decode-step latency in the telemetry channel
-        t0 = time.perf_counter()
+    def _decode_batched(self) -> int:
+        if not any(r is not None for r in self._active):
+            return 0
+        tokens = np.zeros(self.slots, np.int32)
+        for slot, req in enumerate(self._active):
+            if req is not None:
+                tokens[slot] = req.generated[-1]
+        nxt, pos, self._cache = self._programs.decode(
+            self.params, self._cache, jnp.asarray(tokens))
+        nxt, pos = jax.device_get((nxt, pos))   # one bulk transfer per tick
+        emitted = 0
+        for slot, req in enumerate(self._active):
+            if req is None:      # masked slot: decoded, output ignored
+                continue
+            req.generated.append(int(nxt[slot]))
+            emitted += 1
+            if len(req.generated) >= req.max_new_tokens \
+                    or int(pos[slot]) >= self.max_seq - 1:
+                req.done = True
+                self._active[slot] = None
+        return emitted
+
+    def _decode_per_slot(self) -> int:
         emitted = 0
         for slot, req in enumerate(self._active):
             if req is None:
                 continue
             tok = jnp.asarray([req.generated[-1]], jnp.int32)
-            logits, cache = self._jit_decode(self.params,
-                                             self._caches[slot], tok)
+            logits, cache = self._programs.decode_ref(
+                self.params, self._caches[slot], tok)
             self._caches[slot] = cache
             nxt = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
             req.generated.append(nxt)
@@ -150,6 +215,19 @@ class ServingEngine:
                     or int(cache["pos"]) >= self.max_seq - 1:
                 req.done = True
                 self._active[slot] = None
+        return emitted
+
+    def step(self) -> int:
+        """One engine tick: admit waiting requests, decode one token for
+        every active slot.  Returns number of tokens emitted."""
+        self._admit()
+        # time only the decode sweep: prefill/compile costs would otherwise
+        # masquerade as decode-step latency in the telemetry channel
+        t0 = time.perf_counter()
+        if self.decode_mode == "batched":
+            emitted = self._decode_batched()
+        else:
+            emitted = self._decode_per_slot()
         self.stats.steps += 1
         self.stats.tokens_out += emitted
         dt = time.perf_counter() - t0
@@ -159,7 +237,7 @@ class ServingEngine:
         return emitted
 
     def drain(self, max_steps: int = 10_000) -> None:
-        while (any(self._active) or self._queue) and max_steps:
+        while self.has_work and max_steps:
             self.step()
             max_steps -= 1
 
@@ -168,19 +246,18 @@ class ServingEngine:
                    opts: RuntimeOptions) -> None:
         """Middleware hook: switch the serving variant.  Active requests
         finish their decode on fresh caches via re-prefill of their
-        generated prefix (retraining-free variant switching)."""
+        generated prefix (retraining-free variant switching).  The stacked
+        cache is rebuilt once per generation; programs come from the
+        compile cache, so swapping back to an already-served variant
+        costs zero compiles."""
         pending = [r for r in self._active if r is not None]
         for r in pending:
             r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
                                                             np.int32)])
-            self._queue.insert(0, dataclasses.replace(
+            self._queue.appendleft(dataclasses.replace(
                 r, prompt=r_prompt, generated=list(r.generated)))
         self.cfg, self.params, self.opts = cfg, params, opts
         self._active = [None] * self.slots
-        self._caches = [init_cache(cfg, 1, self.max_seq, opts)
-                        for _ in range(self.slots)]
-        self._jit_decode = jax.jit(
-            lambda p, c, t: decode_step(p, cfg, c, t, opts))
-        self._prefill_cache.clear()
+        self._programs = self._bind_programs()
+        self._reset_caches()
         self.generation += 1
-        self.stats.recompiles += 1

@@ -8,10 +8,10 @@ import pytest
 from repro.configs import get_config
 from repro.core import (Calibration, ResourceContext, case_study_trace,
                         constant_trace, dvfs_spike_trace, shape_context)
-from repro.fleet import (FleetController, HEAVY, LIGHT, MEDIUM, PLATFORMS,
-                         TIERS, EwmaLsqCalibrator, TelemetryStore,
-                         build_fleet, device_trace, fleet_report,
-                         make_device)
+from repro.fleet import (ENGINE, FleetController, HEAVY, LIGHT, MEDIUM,
+                         PLATFORMS, SIMULATED, TIERS, EwmaLsqCalibrator,
+                         TelemetryStore, build_fleet, device_trace,
+                         fleet_report, make_device)
 from repro.fleet.telemetry import MeasurementRecord
 from repro.models.configs import InputShape
 
@@ -104,6 +104,100 @@ def test_telemetry_mape_drops_with_calibration():
                        calibration=store.calibration_for_tier(LIGHT))
     assert before > 0.3
     assert after < 0.05 < before
+
+
+# ------------------------------------------------- per-channel pooling ----
+def test_channel_pooling_prevents_cross_contamination():
+    """Engine wall-times and simulated-silicon observations live on
+    unrelated scales; pooling them into one tier fit used to wreck both."""
+    store = TelemetryStore()
+    rng = np.random.default_rng(2)
+    for i in range(32):
+        p = float(rng.uniform(0.1, 1.0))
+        store.record(MeasurementRecord(
+            device_id="sim0", tier=LIGHT, tick=i,
+            predicted_latency_s=p, observed_latency_s=1.6 * p,
+            predicted_energy_j=p, observed_energy_j=1.5 * p))
+        # an engine-backed peer reporting ~constant millisecond step times
+        store.record(MeasurementRecord(
+            device_id="eng0", tier=LIGHT, tick=i,
+            predicted_latency_s=p, observed_latency_s=2e-3,
+            predicted_energy_j=p, observed_energy_j=2e-2,
+            channel=ENGINE))
+    sim = store.calibration_for_tier(LIGHT)              # default: simulated
+    assert sim.latency(1.0) == pytest.approx(1.6, rel=0.05)
+    eng = store.calibration_for_tier(LIGHT, ENGINE)
+    assert eng.latency(0.5) == pytest.approx(2e-3, rel=0.3)
+    assert store.device_channel("eng0") == ENGINE
+    assert store.device_channel("sim0") == SIMULATED
+    # channel-filtered MAPE sees only its own records
+    assert store.mape(tier=LIGHT, channel=SIMULATED,
+                      calibration=sim) < 0.05
+
+
+class _FakeEngine:
+    """Duck-typed ServingEngine: always busy, constant step wall-time."""
+
+    def __init__(self, step_s: float):
+        self.has_work = True
+        self.step_times = []
+        self._dt = step_s
+
+    def step(self) -> None:
+        self.step_times.append(self._dt)
+
+
+def test_mixed_channel_fleet_keeps_simulated_fit_clean():
+    fleet = build_fleet(6, seed=0)
+    lights = [d for d in fleet if d.tier == LIGHT]
+    assert len(lights) >= 2
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=16, warmup_ticks=4)
+    # wall-clock steps ~6 orders of magnitude off the analytic scale —
+    # any cross-contamination would be unmissable
+    ctl.attach_engine(lights[0].device_id, _FakeEngine(2e-3))
+    ctl.run(16)
+    sim_cal = ctl.telemetry.calibration_for_tier(LIGHT)
+    # the simulated light-tier fit still recovers the remaining device's
+    # latent silicon bias, unpolluted by the engine's wall-times
+    assert sim_cal.latency_scale == pytest.approx(
+        lights[1].latent_latency_factor, rel=0.1)
+    # and each device's loop got its own channel's correction
+    eng_cal = ctl.calibration_of(lights[0].device_id)
+    assert eng_cal == ctl.telemetry.calibration_for_tier(LIGHT, ENGINE)
+    assert ctl.calibration_of(lights[1].device_id) == sim_cal
+    assert eng_cal != sim_cal
+
+
+# ---------------------------------------------- fleet-level compile cache --
+def test_same_platform_fleet_engines_share_compiled_programs():
+    import jax as _jax
+    from repro.models.model import init_params as _init_params
+    tiny = CFG.with_updates(num_layers=2, d_model=64, num_heads=4,
+                            num_kv_heads=2, head_dim=16, d_ff=128,
+                            vocab_size=300)
+    tparams = _init_params(tiny, _jax.random.PRNGKey(0))
+    fleet = [make_device("pixel_6_cpu", 0), make_device("pixel_6_cpu", 1),
+             make_device("raspberry_pi4", 0)]
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=8)
+
+    def serve_on(device_id):
+        from repro.serving import Request
+        eng = ctl.build_engine(device_id, tparams, cfg=tiny, slots=2,
+                               max_seq=64)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(rid=i, prompt=rng.integers(
+                0, 300, size=8).astype(np.int32), max_new_tokens=4))
+        eng.drain()
+        return eng
+
+    e0 = serve_on("pixel_6_cpu#0")
+    assert e0.stats.recompiles > 0           # first engine builds programs
+    e1 = serve_on("pixel_6_cpu#1")
+    assert e1.stats.recompiles == 0          # same platform: zero compiles
+    assert e1.stats.tokens_out == e0.stats.tokens_out
+    e2 = serve_on("raspberry_pi4#0")
+    assert e2.stats.recompiles > 0           # cross-platform: own programs
 
 
 # ------------------------------------------------------- fleet controller --

@@ -1,25 +1,34 @@
 """ServingEngine swap_model token accounting: re-queued in-flight
-requests must not overshoot max_new_tokens or double-count tokens_out."""
+requests must not overshoot max_new_tokens or double-count tokens_out.
+Runs against BOTH decode paths (slot-batched and the per-slot
+reference) — swap semantics must not depend on the decode mode."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models.model import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import CompileCache, Request, ServingEngine
 
 CFG = get_config("paper-backbone").with_updates(
     num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
     d_ff=128, vocab_size=300)
 PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+CC = CompileCache()
 
 
-def _engine(slots=2):
-    return ServingEngine(CFG, PARAMS, slots=slots, max_seq=64)
+@pytest.fixture(params=["batched", "per_slot"])
+def mode(request):
+    return request.param
 
 
-def test_swap_midflight_respects_token_budget():
-    eng = _engine()
+def _engine(mode, slots=2):
+    return ServingEngine(CFG, PARAMS, slots=slots, max_seq=64,
+                         decode_mode=mode, compile_cache=CC)
+
+
+def test_swap_midflight_respects_token_budget(mode):
+    eng = _engine(mode)
     prompt = np.arange(1, 9, dtype=np.int32)
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
     eng.step()                       # prefill token + one decode token
@@ -35,8 +44,8 @@ def test_swap_midflight_respects_token_budget():
     assert eng.stats.tokens_out == 3
 
 
-def test_swap_with_budget_already_spent_emits_nothing():
-    eng = _engine()
+def test_swap_with_budget_already_spent_emits_nothing(mode):
+    eng = _engine(mode)
     prompt = np.arange(1, 6, dtype=np.int32)
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=2))
     eng.step()                       # generated: prefill + decode = 2 == max
@@ -47,8 +56,8 @@ def test_swap_with_budget_already_spent_emits_nothing():
     assert eng.stats.tokens_out == before == 2
 
 
-def test_zero_budget_request_never_prefills():
-    eng = _engine()
+def test_zero_budget_request_never_prefills(mode):
+    eng = _engine(mode)
     eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
                        max_new_tokens=0))
     eng.step()
@@ -57,10 +66,10 @@ def test_zero_budget_request_never_prefills():
     assert not any(eng._active) and not eng._queue
 
 
-def test_prompt_longer_than_max_seq_is_truncated_not_crashed():
+def test_prompt_longer_than_max_seq_is_truncated_not_crashed(mode):
     # covers both a fresh oversized submission and a swap re-queue whose
     # prompt grew past max_seq by the generated prefix
-    eng = _engine()
+    eng = _engine(mode)
     eng.submit(Request(rid=0, prompt=np.arange(1, 101, dtype=np.int32),
                        max_new_tokens=2))
     eng.drain()
@@ -68,8 +77,8 @@ def test_prompt_longer_than_max_seq_is_truncated_not_crashed():
     assert eng.stats.tokens_out >= 1
 
 
-def test_step_timing_hook_fires():
-    eng = _engine()
+def test_step_timing_hook_fires(mode):
+    eng = _engine(mode)
     seen = []
     eng.on_step = lambda dt, emitted, gen: seen.append((dt, emitted, gen))
     eng.submit(Request(rid=0, prompt=np.arange(1, 5, dtype=np.int32),
