@@ -1,13 +1,18 @@
 """Heterogeneous fleet with crowd-shared telemetry calibration.
 
 Runs a ≥10-device fleet (all three hardware tiers) over the day-long
-case-study trace, reporting per-tier latency/violation/energy, the
-before/after profiler prediction error (MAPE) that tier-pooled
-calibration buys, and the cross-tier divergence of adaptation decisions
-under one identical context.
+case-study trace under the event-driven scheduler, reporting per-tier
+latency/violation/energy, the before/after profiler prediction error
+(MAPE) that tier-pooled calibration buys, the cross-tier divergence of
+adaptation decisions under one identical context, and the scheduler's
+asynchrony itself — per-device tick spread, clock skew, and an
+event-vs-lockstep wall-time comparison.  Results go to stdout (the
+``name,us_per_call,derived`` CSV contract) and to ``BENCH_fleet.json``
+for trend tracking.
 """
 from __future__ import annotations
 
+import json
 import time
 from collections import Counter
 
@@ -20,14 +25,20 @@ from .common import emit, header
 
 FLEET_SIZE = 12
 TICKS = 24
+# event-mode traces must outlast the run(TICKS) horizon (TICKS × the
+# slowest member's period), or fast devices exhaust their contexts and
+# idle — hiding exactly the differential tick rates being measured.
+# Heavy tier wakes 4× as often as light, so 4×TICKS contexts suffice.
+EVENT_TRACE_TICKS = 4 * TICKS
+JSON_PATH = "BENCH_fleet.json"
 
 
 def run() -> None:
-    header("heterogeneous fleet + crowd telemetry")
+    header("heterogeneous fleet + crowd telemetry (event-driven)")
     cfg = get_config("paper-backbone")
     shape = InputShape("fleet", 256, 4, "prefill")
     fleet = build_fleet(FLEET_SIZE, seed=0)
-    ctl = FleetController(fleet, cfg, shape, trace_ticks=TICKS)
+    ctl = FleetController(fleet, cfg, shape, trace_ticks=EVENT_TRACE_TICKS)
     t0 = time.perf_counter()
     ctl.run(TICKS)
     wall = (time.perf_counter() - t0) * 1e6
@@ -35,7 +46,26 @@ def run() -> None:
     emit("fleet.run", wall / max(rep.total_ticks, 1),
          f"devices={FLEET_SIZE};ticks={rep.total_ticks}")
 
+    results = {
+        "config": {"devices": FLEET_SIZE, "ticks": TICKS,
+                   "trace_ticks": EVENT_TRACE_TICKS,
+                   "step_mode": "event", "arch": cfg.name},
+        "tiers": {},
+        "violations": {"first_half": rep.violations_first_half,
+                       "second_half": rep.violations_second_half},
+        "event": {"device_ticks": rep.device_ticks,
+                  "clock_skew_s": rep.clock_skew_s},
+    }
     for t in rep.tiers:
+        results["tiers"][t.tier] = {
+            "devices": t.devices, "ticks": t.ticks,
+            "ticks_per_device": [t.min_device_ticks, t.max_device_ticks],
+            "mean_latency_s": t.mean_latency_s,
+            "p95_latency_s": t.p95_latency_s,
+            "violations": t.violations, "violation_rate": t.violation_rate,
+            "energy_j": t.energy_j,
+            "mape_before": t.mape_before, "mape_after": t.mape_after,
+        }
         emit(f"fleet.tier.{t.tier}", t.mean_latency_s * 1e6,
              f"p95_us={t.p95_latency_s*1e6:.1f};viol={t.violations};"
              f"rate={t.violation_rate:.2f};energy_J={t.energy_j:.3g}")
@@ -46,7 +76,28 @@ def run() -> None:
          f"first_half={rep.violations_first_half};"
          f"second_half={rep.violations_second_half};"
          f"decreased={int(rep.violations_second_half < rep.violations_first_half)}")
+    ticks = rep.device_ticks.values()
+    emit("fleet.async.ticks", 0.0,
+         f"min={min(ticks)};max={max(ticks)};"
+         f"skew_s={rep.clock_skew_s:.3f}")
     print(rep.render())
+
+    # event vs lockstep: same fleet/scenario, synchronized stepping —
+    # wall-time per record and the (absence of) tick-count spread
+    lk = FleetController(build_fleet(FLEET_SIZE, seed=0), cfg, shape,
+                         trace_ticks=TICKS, step_mode="lockstep")
+    t0 = time.perf_counter()
+    lk.run(TICKS)
+    lk_wall = (time.perf_counter() - t0) * 1e6
+    lk_rep = fleet_report(lk)
+    emit("fleet.lockstep.run", lk_wall / max(lk_rep.total_ticks, 1),
+         f"ticks={lk_rep.total_ticks};skew_s={lk_rep.clock_skew_s:.3f}")
+    results["lockstep"] = {
+        "total_ticks": lk_rep.total_ticks,
+        "clock_skew_s": lk_rep.clock_skew_s,
+        "us_per_record": lk_wall / max(lk_rep.total_ticks, 1),
+    }
+    results["event"]["us_per_record"] = wall / max(rep.total_ticks, 1)
 
     # decision divergence: fresh loops (no hysteresis history), one per
     # tier, carrying only that tier's crowd-learned calibration, all fed
@@ -67,6 +118,7 @@ def run() -> None:
     emit("fleet.decision.divergence", 0.0,
          f"tiers={len(chosen)};distinct={distinct};"
          f"diverged={int(distinct > 1)}")
+    results["decisions"] = {"per_tier": chosen, "distinct": distinct}
 
     # per-tier action histogram over the whole shared scenario
     for tier in TIERS:
@@ -78,6 +130,10 @@ def run() -> None:
                      f"{r.decision.action.engine.remat_policy}"] += 1
         top = ";".join(f"{k}:{n}" for k, n in hist.most_common(3))
         emit(f"fleet.actions.{tier}", 0.0, top)
+
+    with open(JSON_PATH, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {JSON_PATH}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,13 @@
 """Fleet demo: a heterogeneous crowd of devices co-adapting together.
 
-Builds a small fleet spanning all three hardware tiers, runs the
-per-device adaptation loops over the shared day-long scenario, and closes
-the paper's back-end→front-end feedback loop with tier-pooled telemetry
-calibration.  One device is backed by a REAL ServingEngine on a tiny
-model — its measured decode-step wall-times (not simulated silicon) are
-what telemetry sees for that device.
+Builds a small fleet spanning all three hardware tiers and runs it
+**event-driven**: each device wakes at its own envelope rate (a TPU
+slice re-adapts 4× as often as a little-core phone), telemetry reports
+arrive out of order, and tier-pooled calibration closes the paper's
+back-end→front-end feedback loop.  One device is backed by a REAL
+ServingEngine on a tiny model — its measured decode-step wall-times
+(not simulated silicon) are what telemetry sees for that device, and
+its step-time EWMA stretches the device's wake period.
 
   PYTHONPATH=src python examples/fleet_demo.py
 """
@@ -34,12 +36,15 @@ def main() -> None:
     for d in fleet:
         print(f"  {d.device_id:24s} tier={d.tier:6s} "
               f"peak={d.hw.peak_flops/1e12:.2f} TFLOP/s "
+              f"wake_every={d.tick_envelope.nominal_s}s "
               f"battery={'wall' if d.wall_powered else f'{d.battery_wh}Wh'}")
 
-    ctl = FleetController(fleet, cfg, shape, trace_ticks=16,
+    # traces longer than the horizon so fast devices never idle out —
+    # their extra wakes are the point of event-driven stepping
+    ctl = FleetController(fleet, cfg, shape, trace_ticks=80,
                           warmup_ticks=4)
 
-    # back one light-tier device with a real engine: measured step times
+    # back the light-tier device with a real engine: measured step times
     # become its telemetry observations.  build_engine wires it to the
     # fleet's shared compile cache under the device's platform domain.
     engine_dev = next(d for d in fleet if d.tier == "light")
@@ -54,11 +59,17 @@ def main() -> None:
     engine.step()      # warm up jit compiles so telemetry sees steady state
     ctl.set_sla(engine_dev.device_id, 5e-3)   # 5 ms/step, externally given
     print(f"\nengine-backed device: {engine_dev.device_id} "
-          f"(real decode-step wall times feed telemetry)")
+          f"(real decode-step wall times feed telemetry + next-wake)")
 
-    ctl.run(16)
+    ctl.run_for(16.0)   # 16 simulated seconds of independent ticking
 
-    print("\n" + fleet_report(ctl).render())
+    rep = fleet_report(ctl)
+    print("\n" + rep.render())
+    print(f"\nper-device wakes over {ctl.now_s:.0f}s of fleet time "
+          f"(clock skew {rep.clock_skew_s:.2f}s):")
+    for did, n in sorted(rep.device_ticks.items(), key=lambda kv: -kv[1]):
+        print(f"  {did:24s} {n:3d} ticks")
+
     print("\nlearned tier calibrations (observed/predicted), per channel:")
     from repro.fleet import CHANNELS
     for tier in ("heavy", "medium", "light"):
@@ -72,7 +83,8 @@ def main() -> None:
     done = sum(1 for t in engine.step_times)
     print(f"\nengine: {engine.stats.steps} steps, "
           f"{engine.stats.tokens_out} tokens, "
-          f"median step {sorted(engine.step_times)[done // 2]*1e3:.2f} ms")
+          f"median step {sorted(engine.step_times)[done // 2]*1e3:.2f} ms, "
+          f"ewma {engine.step_time_ewma_s*1e3:.2f} ms")
 
 
 if __name__ == "__main__":

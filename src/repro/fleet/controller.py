@@ -7,6 +7,18 @@ fits per-tier corrections and the controller pushes them back into every
 same-tier loop's evaluator — back-end measurements steering front-end
 decisions, across devices.
 
+Stepping is **event-driven** by default (``step_mode="event"``): a
+min-heap of per-device next-wake times lets every device tick at its own
+rate — the wake period comes from the device's
+:attr:`~repro.fleet.registry.DeviceSpec.tick_envelope` (tier base rate,
+DVFS-derated, clamped) plus, for engine-backed devices, the engine's
+measured step-time EWMA.  A throttled little-core phone therefore never
+gates an idle TPU slice, and telemetry reports reach the
+:class:`TelemetryStore` out of order (per-device reporting jitter),
+which the store's timestamp-sorted calibrators absorb.  The legacy
+synchronized path is kept as ``step_mode="lockstep"``: one global tick
+advances every device in unison, exactly the pre-event behavior.
+
 Observations come from either (a) the device's latent ground-truth bias
 (simulated silicon, default) or (b) a real :class:`ServingEngine`
 attached to the device, whose measured step wall-times become the
@@ -14,9 +26,11 @@ observed latencies (see ``attach_engine``).
 """
 from __future__ import annotations
 
+import heapq
 import random
+import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.actions import Action
 from repro.core.loop import AdaptationLoop, Decision
@@ -28,12 +42,22 @@ from repro.serving import CompileCache
 from .registry import DeviceSpec, device_trace
 from .telemetry import ENGINE, SIMULATED, MeasurementRecord, TelemetryStore
 
+# the workload shape fleet loops adapt for unless a caller overrides it
 DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
+
+# "event": min-heap of per-device next-wake times (default);
+# "lockstep": legacy synchronized stepping, one global tick for everyone
+STEP_MODES = ("event", "lockstep")
 
 
 @dataclass
 class FleetTickRecord:
-    """What one device did and what it cost on one fleet tick."""
+    """What one device did and what it cost on one fleet tick.
+
+    ``tick`` is the device's own wake counter (in lockstep mode it
+    coincides with the global tick); ``timestamp_s`` is the simulated
+    fleet-clock instant of the wake — under event stepping, same-tick
+    records from different devices carry different timestamps."""
     device_id: str
     tier: str
     tick: int
@@ -45,6 +69,7 @@ class FleetTickRecord:
     observed_energy_j: float
     sla_s: float
     violated: bool
+    timestamp_s: float = 0.0
 
 
 @dataclass
@@ -57,11 +82,20 @@ class _DeviceRuntime:
     engine: object = None         # optional ServingEngine
     engine_steps: int = 4
     exhausted: bool = False
+    ticks: int = 0                # wakes taken so far
 
 
 class FleetController:
     """Steps a heterogeneous fleet through shared scenarios, closing the
-    telemetry loop per hardware tier."""
+    telemetry loop per hardware tier.
+
+    ``step_mode="event"`` (default) schedules devices on a min-heap of
+    next-wake times so each ticks at its envelope's rate;
+    ``step_mode="lockstep"`` advances all devices once per global tick
+    (the legacy synchronized behavior).  In both modes ``run(ticks)``
+    and ``step()`` work; event mode additionally exposes
+    ``run_for(duration_s)`` to advance the simulated clock by a fixed
+    horizon, which is where differential tick counts come from."""
 
     def __init__(self, fleet: Sequence[DeviceSpec], cfg: ModelConfig,
                  shape: InputShape = DEFAULT_SHAPE, *,
@@ -74,9 +108,15 @@ class FleetController:
                  trace_ticks: int = 24,
                  trace_factory=None,
                  compile_cache: Optional[CompileCache] = None,
+                 step_mode: str = "event",
+                 telemetry_jitter_s: Optional[float] = None,
                  seed: int = 0):
+        if step_mode not in STEP_MODES:
+            raise ValueError(f"unknown step_mode {step_mode!r}; "
+                             f"expected one of {STEP_MODES}")
         self.cfg = cfg
         self.shape = shape
+        self.step_mode = step_mode
         self.telemetry = TelemetryStore()
         # fleet-level jit-program cache: engine-backed devices of the same
         # platform share compiled decode/prefill programs through this
@@ -110,11 +150,50 @@ class FleetController:
                 spec=spec, loop=loop, trace=iter(trace),
                 rng=random.Random(seed * 7919 + spec.trace_seed),
                 sla_s=sla)
+        # ---- event-scheduler state (inert under lockstep) -------------
+        periods = [d.spec.tick_envelope.nominal_s
+                   for d in self._devices.values()] or [1.0]
+        # run(ticks) horizon unit: the slowest member's nominal period,
+        # so one "tick" of run() gives even the slowest device one wake
+        self._base_period_s = max(periods)
+        self._min_period_s = min(periods)
+        # calibration cadence on the fleet clock, scaled so the fastest
+        # devices see the same warmup/recalibrate tick counts as lockstep
+        self._cal_period_s = recalibrate_every * self._min_period_s
+        self._warmup_end_s = warmup_ticks * self._min_period_s
+        self._next_cal_s = self._warmup_end_s
+        self._now = 0.0
+        self._seq = 0
+        # telemetry reporting jitter: reports arrive at the store this
+        # long after the observation (deterministic per (device, tick)),
+        # de-ordering same-window reports across devices
+        self._jitter_s = (telemetry_jitter_s if telemetry_jitter_s
+                          is not None else 0.5 * self._min_period_s)
+        self._pending: List[Tuple[float, int, MeasurementRecord]] = []
+        self._heap: List[Tuple[float, int, str]] = []
+        n = max(len(fleet), 1)
+        for i, d in enumerate(self._devices.values()):
+            # stagger first wakes across each device's own period so the
+            # fleet doesn't start phase-locked
+            self._push(d.spec.tick_envelope.nominal_s * i / n,
+                       d.spec.device_id)
 
     # ----------------------------------------------------------- plumbing --
     @property
     def devices(self) -> List[DeviceSpec]:
         return [d.spec for d in self._devices.values()]
+
+    @property
+    def now_s(self) -> float:
+        """Current simulated fleet-clock time."""
+        return self._now
+
+    @property
+    def tick_counts(self) -> Dict[str, int]:
+        """Wakes taken per device so far — under event stepping fast
+        devices accumulate strictly more than slow ones over the same
+        simulated horizon."""
+        return {did: d.ticks for did, d in self._devices.items()}
 
     def loop_for(self, device_id: str) -> AdaptationLoop:
         return self._devices[device_id].loop
@@ -134,7 +213,9 @@ class FleetController:
     def attach_engine(self, device_id: str, engine, steps_per_tick: int = 4
                       ) -> None:
         """Back a device with a real ServingEngine: its measured step
-        wall-times replace the simulated observation for that device."""
+        wall-times replace the simulated observation for that device,
+        and (in event mode) its step-time EWMA feeds the device's
+        next-wake estimate."""
         d = self._devices[device_id]
         d.engine = engine
         d.engine_steps = steps_per_tick
@@ -188,42 +269,135 @@ class FleetController:
         obs_j = raw_pred_j * d.spec.latent_energy_factor * (1.0 + eps_e)
         return obs_s, obs_j, SIMULATED
 
+    # ------------------------------------------------------- shared tick ---
+    def _advance(self, d: _DeviceRuntime, now_s: float
+                 ) -> Tuple[Optional[FleetTickRecord],
+                            Optional[ResourceContext]]:
+        """Advance one device by one wake at fleet-clock ``now_s``:
+        consume a trace context, adapt, execute, report telemetry."""
+        try:
+            ctx = next(d.trace)
+        except StopIteration:
+            d.exhausted = True
+            return None, None
+        d.ticks += 1
+        decision = d.loop.tick(ctx)
+        raw = d.loop.evaluator.evaluate(decision.action, ctx,
+                                        calibrate=False)
+        obs = self._observe(d, raw.latency_s, raw.energy_j)
+        if obs is None:
+            return None, ctx
+        obs_s, obs_j, chan = obs
+        mrec = MeasurementRecord(
+            device_id=d.spec.device_id, tier=d.spec.tier,
+            tick=d.ticks,
+            predicted_latency_s=raw.latency_s,
+            observed_latency_s=obs_s,
+            predicted_energy_j=raw.energy_j,
+            observed_energy_j=obs_j,
+            channel=chan, timestamp_s=now_s)
+        self._report(mrec)
+        rec = FleetTickRecord(
+            device_id=d.spec.device_id, tier=d.spec.tier,
+            tick=d.ticks, ctx=ctx, decision=decision,
+            predicted_raw_s=raw.latency_s,
+            predicted_s=decision.eval.latency_s,
+            observed_s=obs_s, observed_energy_j=obs_j,
+            sla_s=d.sla_s, violated=obs_s > d.sla_s,
+            timestamp_s=now_s)
+        self.records.append(rec)
+        return rec, ctx
+
+    # -------------------------------------------------- telemetry arrival --
+    def _report(self, mrec: MeasurementRecord) -> None:
+        """Route a measurement toward the store.  Lockstep (or zero
+        jitter) delivers immediately; event mode delays each report by a
+        deterministic per-(device, tick) latency, so arrival order at the
+        store differs from observation order across devices."""
+        if self.step_mode == "lockstep" or self._jitter_s <= 0:
+            self.telemetry.record(mrec)
+            return
+        frac = ((zlib.crc32(mrec.device_id.encode())
+                 + mrec.tick * 2654435761) % 1000) / 1000.0
+        arrival = mrec.timestamp_s + frac * self._jitter_s
+        self._seq += 1
+        heapq.heappush(self._pending, (arrival, self._seq, mrec))
+
+    def _flush_reports(self, upto_s: float) -> None:
+        while self._pending and self._pending[0][0] <= upto_s:
+            _, _, mrec = heapq.heappop(self._pending)
+            self.telemetry.record(mrec)
+
+    # ------------------------------------------------------ event engine ---
+    def _push(self, when_s: float, device_id: str) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (when_s, self._seq, device_id))
+
+    def _next_period(self, d: _DeviceRuntime,
+                     ctx: Optional[ResourceContext]) -> float:
+        """Seconds until this device's next wake: DVFS-derated envelope
+        period, plus the engine's measured step latency when one is
+        attached (the serving hook feeding next-wake estimates)."""
+        env = d.spec.tick_envelope
+        derate = ctx.cpu_temp_derate if ctx is not None else 1.0
+        period = env.clamp(env.nominal_s / max(derate, 1e-3))
+        if d.engine is not None:
+            est = getattr(d.engine, "step_time_ewma_s", None)
+            if est:
+                period += d.engine_steps * est
+        return period
+
+    def run_for(self, duration_s: float) -> List[FleetTickRecord]:
+        """Event mode: advance the simulated clock by ``duration_s``,
+        processing every device wake that falls due.  Fast devices wake
+        many times per slow-device wake; devices whose traces end go
+        idle without holding anyone back.  Finishes with a telemetry
+        flush and recalibration so loop corrections reflect everything
+        observed inside the horizon."""
+        if self.step_mode != "event":
+            raise RuntimeError("run_for() requires step_mode='event'; "
+                               "use step()/run() under lockstep")
+        horizon = self._now + duration_s
+        out: List[FleetTickRecord] = []
+        while self._heap and self._heap[0][0] <= horizon:
+            when, _, did = heapq.heappop(self._heap)
+            self._now = max(self._now, when)
+            self._flush_reports(self._now)
+            while self._now >= self._next_cal_s:
+                self.recalibrate()
+                self._next_cal_s += self._cal_period_s
+            d = self._devices[did]
+            if d.exhausted:
+                continue
+            rec, ctx = self._advance(d, self._now)
+            if not d.exhausted:
+                self._push(self._now + self._next_period(d, ctx), did)
+            if rec is not None:
+                out.append(rec)
+        self._now = horizon
+        # every pending report was observed inside the horizon — deliver
+        # even those whose jittered arrival would land past it, so the
+        # closing recalibration and any post-run report see everything
+        self._flush_reports(float("inf"))
+        if self._now >= self._warmup_end_s:
+            self.recalibrate()
+        return out
+
     # --------------------------------------------------------------- step --
     def step(self) -> List[FleetTickRecord]:
-        """One fleet tick: every device advances its trace by one context,
-        adapts, executes (simulated or engine-backed), reports telemetry."""
+        """One fleet step.  Lockstep: every device advances its trace by
+        one context in unison.  Event: the simulated clock advances by
+        one base period (the slowest member's nominal wake interval) and
+        whichever wakes fall due are processed — fast devices several,
+        slow devices at most one."""
+        if self.step_mode == "event":
+            return self.run_for(self._base_period_s)
         self._tick += 1
         out: List[FleetTickRecord] = []
         for d in self._devices.values():
-            try:
-                ctx = next(d.trace)
-            except StopIteration:
-                d.exhausted = True
-                continue
-            decision = d.loop.tick(ctx)
-            raw = d.loop.evaluator.evaluate(decision.action, ctx,
-                                            calibrate=False)
-            obs = self._observe(d, raw.latency_s, raw.energy_j)
-            if obs is None:
-                continue
-            obs_s, obs_j, chan = obs
-            self.telemetry.record(MeasurementRecord(
-                device_id=d.spec.device_id, tier=d.spec.tier,
-                tick=self._tick,
-                predicted_latency_s=raw.latency_s,
-                observed_latency_s=obs_s,
-                predicted_energy_j=raw.energy_j,
-                observed_energy_j=obs_j,
-                channel=chan))
-            rec = FleetTickRecord(
-                device_id=d.spec.device_id, tier=d.spec.tier,
-                tick=self._tick, ctx=ctx, decision=decision,
-                predicted_raw_s=raw.latency_s,
-                predicted_s=decision.eval.latency_s,
-                observed_s=obs_s, observed_energy_j=obs_j,
-                sla_s=d.sla_s, violated=obs_s > d.sla_s)
-            self.records.append(rec)
-            out.append(rec)
+            rec, _ = self._advance(d, float(self._tick))
+            if rec is not None:
+                out.append(rec)
         if self._tick >= self.warmup_ticks \
                 and (self._tick - self.warmup_ticks) \
                 % self.recalibrate_every == 0:
@@ -231,6 +405,9 @@ class FleetController:
         return out
 
     def run(self, ticks: int) -> List[FleetTickRecord]:
+        """Advance the fleet by ``ticks`` steps (see :meth:`step` for
+        what one step means per mode), stopping early once every trace
+        is exhausted."""
         out = []
         for _ in range(ticks):
             if all(d.exhausted for d in self._devices.values()):
@@ -279,7 +456,19 @@ class FleetController:
         return loop
 
     def violations(self, tier: Optional[str] = None,
-                   first_tick: int = 0, last_tick: int = 10 ** 9) -> int:
-        return sum(1 for r in self.records
-                   if r.violated and first_tick <= r.tick <= last_tick
-                   and (tier is None or r.tier == tier))
+                   first_tick: int = 0, last_tick: int = 10 ** 9,
+                   first_s: Optional[float] = None,
+                   last_s: Optional[float] = None) -> int:
+        """Count SLA violations, filtered by tier and either per-device
+        tick range (``first_tick``/``last_tick``) or fleet-clock window
+        (``first_s``/``last_s`` — the natural filter under event
+        stepping, where tick numbers aren't comparable across devices)."""
+        def keep(r: FleetTickRecord) -> bool:
+            if not r.violated or (tier is not None and r.tier != tier):
+                return False
+            if first_s is not None and r.timestamp_s < first_s:
+                return False
+            if last_s is not None and r.timestamp_s > last_s:
+                return False
+            return first_tick <= r.tick <= last_tick
+        return sum(1 for r in self.records if keep(r))

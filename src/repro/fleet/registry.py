@@ -30,6 +30,35 @@ from repro.core.profiler import HardwareProfile, MOBILE_CPU, TPU_V5E
 HEAVY, MEDIUM, LIGHT = "heavy", "medium", "light"
 TIERS = (HEAVY, MEDIUM, LIGHT)
 
+# Nominal seconds of simulated time between adaptation-loop wakes per
+# tier.  Heavy silicon re-evaluates its deployment more often than a
+# little-core phone: its monitor sampling, profiler sweep and apply step
+# all cost a fraction of what they cost downmarket.  These set the
+# *relative* tick rates of the event-driven fleet scheduler; absolute
+# values are arbitrary simulated seconds.
+TIER_TICK_S: Dict[str, float] = {HEAVY: 0.25, MEDIUM: 0.5, LIGHT: 1.0}
+
+
+@dataclass(frozen=True)
+class TickEnvelope:
+    """Per-device bounds on the adaptation-loop wake period.
+
+    ``nominal_s`` is the steady-state period between wakes (the tier's
+    base rate scaled by :attr:`DeviceSpec.tick_scale`); ``min_s`` is the
+    fastest the device is allowed to re-adapt (its nominal rate — a
+    device never runs its loop faster than designed); ``max_s`` is the
+    slowest it degrades to under a full DVFS throttle
+    (``nominal_s / dvfs_floor``).  The event scheduler derives every
+    next-wake time by clamping the DVFS-derated period into this
+    envelope, then adding any measured execution latency on top."""
+    nominal_s: float
+    min_s: float
+    max_s: float
+
+    def clamp(self, period_s: float) -> float:
+        """Bound a candidate wake period into [min_s, max_s]."""
+        return min(max(period_s, self.min_s), self.max_s)
+
 
 @dataclass(frozen=True)
 class PlatformProfile:
@@ -125,6 +154,10 @@ PLATFORMS: Dict[str, PlatformProfile] = {p.platform: p for p in (
 
 
 def platforms_by_tier(tier: str) -> List[PlatformProfile]:
+    """All registry platforms in one capability tier (``"heavy"``,
+    ``"medium"`` or ``"light"``), in registry declaration order — the
+    order :func:`build_fleet` round-robins over when instantiating a
+    mixed fleet."""
     return [p for p in PLATFORMS.values() if p.tier == tier]
 
 
@@ -144,10 +177,23 @@ class DeviceSpec:
     latent_latency_factor: float      # true observed/predicted latency ratio
     latent_energy_factor: float
     trace_seed: int = 0
+    # multiplier on the tier's nominal wake period — >1 slows this unit's
+    # adaptation loop (a busy or degraded device); tests use it to pin an
+    # artificially slow fleet member
+    tick_scale: float = 1.0
 
     @property
     def wall_powered(self) -> bool:
         return self.battery_wh >= 1e6
+
+    @property
+    def tick_envelope(self) -> TickEnvelope:
+        """The device's wake-period bounds for the event-driven fleet
+        scheduler: nominal period = tier base rate × ``tick_scale``,
+        degrading at worst to ``nominal / dvfs_floor`` under throttle."""
+        base = TIER_TICK_S[self.tier] * self.tick_scale
+        return TickEnvelope(nominal_s=base, min_s=base,
+                            max_s=base / max(self.dvfs_floor, 1e-3))
 
     @property
     def compile_domain(self) -> str:

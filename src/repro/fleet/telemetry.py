@@ -19,12 +19,20 @@ latencies scaled by latent silicon bias — two scales that share no
 affine relationship.  Calibrator populations are keyed on
 ``(tier, channel)`` (and ``(device, channel)``), so a fleet mixing both
 kinds never cross-contaminates its fits.
+
+Arrival-order independence: under the event-driven fleet scheduler,
+devices tick at independent rates and their reports reach the store out
+of order (reporting latency jitters per device).  Every record carries a
+``timestamp_s``; calibrators keep their samples in a container sorted by
+``(timestamp, device, tick)`` and compute every fit from that sorted
+view, so any permutation of the same record set yields bit-identical
+:class:`Calibration` objects.
 """
 from __future__ import annotations
 
-from collections import deque
+import bisect
 from dataclasses import dataclass
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -38,7 +46,16 @@ CHANNELS = (SIMULATED, ENGINE)
 
 @dataclass(frozen=True)
 class MeasurementRecord:
-    """One back-end observation of one adaptation-loop decision."""
+    """One back-end observation of one adaptation-loop decision.
+
+    ``predicted_*`` fields are the *raw* (uncalibrated) analytic
+    estimates the profiler produced for the decision; ``observed_*`` are
+    what execution actually cost on the ``channel`` that measured it
+    (``"simulated"`` latent-bias silicon or ``"engine"`` wall-clock).
+    ``tick`` counts the reporting device's own adaptation wakes;
+    ``timestamp_s`` is the simulated fleet-clock instant the observation
+    was taken — the sort key that makes calibrator fits independent of
+    the order records reach the store."""
     device_id: str
     tier: str
     tick: int
@@ -48,6 +65,11 @@ class MeasurementRecord:
     observed_energy_j: float
     tokens: int = 0
     channel: str = SIMULATED
+    timestamp_s: float = 0.0
+
+
+# one calibrator sample: (sort_key, pred_lat, obs_lat, pred_en, obs_en)
+_Entry = Tuple[tuple, float, float, float, float]
 
 
 class EwmaLsqCalibrator:
@@ -57,62 +79,110 @@ class EwmaLsqCalibrator:
     from the very first sample).  Warm: least-squares fit of
     ``observed ≈ a·predicted + b`` over a sliding window, which also
     captures fixed per-step overheads (dispatch, cache swaps) that a pure
-    ratio cannot."""
+    ratio cannot.
+
+    Samples are merged in **timestamp order**, not arrival order: each
+    ``observe`` carries a sort key (timestamp plus a deterministic
+    tie-break) and is inserted into a sorted container; ``calibration()``
+    walks that container, so shuffling the arrival order of one record
+    set cannot change the fit.  Direct ``observe`` calls without an
+    explicit timestamp fall back to an arrival counter (the legacy
+    in-order behavior); records fed through :class:`TelemetryStore`
+    always carry their ``timestamp_s`` — unstamped legacy records share
+    a 0.0 timestamp and are ordered by the ``(device_id, tick)``
+    tie-break rather than by arrival."""
 
     def __init__(self, window: int = 64, alpha: float = 0.3,
                  min_lsq_samples: int = 8):
         self.window = window
         self.alpha = alpha
         self.min_lsq_samples = min_lsq_samples
-        self._lat: Deque[Tuple[float, float]] = deque(maxlen=window)
-        self._ratio_lat = 1.0
-        self._ratio_en = 1.0
+        # sorted by sort_key; pruned to the newest _keep entries by time
+        self._entries: List[_Entry] = []
+        self._keep = 4 * window
+        self._arrivals = 0
         self._n = 0
+        self._cached: Optional[Calibration] = None
 
     def observe(self, pred_lat: float, obs_lat: float,
-                pred_en: float, obs_en: float) -> None:
+                pred_en: float, obs_en: float, *,
+                timestamp_s: Optional[float] = None,
+                key: tuple = ()) -> None:
+        """Merge one (predicted, observed) pair.  ``timestamp_s`` orders
+        the sample on the fleet clock (``None`` → arrival order);
+        ``key`` deterministically breaks timestamp ties (the store passes
+        ``(device_id, tick)``)."""
+        self._arrivals += 1
         if pred_lat <= 0 or obs_lat <= 0:
             return
-        self._lat.append((pred_lat, obs_lat))
-        r = obs_lat / pred_lat
-        a = self.alpha
-        self._ratio_lat = (1 - a) * self._ratio_lat + a * r if self._n \
-            else r
-        if pred_en > 0 and obs_en > 0:
-            re = obs_en / pred_en
-            self._ratio_en = (1 - a) * self._ratio_en + a * re if self._n \
-                else re
+        sort_key = ((timestamp_s,) + key if timestamp_s is not None
+                    else (float(self._arrivals),))
+        bisect.insort(self._entries,
+                      (sort_key, pred_lat, obs_lat, pred_en, obs_en))
+        if len(self._entries) > self._keep:
+            # drop the oldest-by-timestamp — the kept set is always "the
+            # newest _keep samples", whatever order they arrived in
+            del self._entries[0]
         self._n += 1
+        self._cached = None
 
     @property
     def samples(self) -> int:
         return self._n
 
     def calibration(self) -> Calibration:
-        scale, bias = self._ratio_lat, 0.0
-        if len(self._lat) >= self.min_lsq_samples:
-            p = np.array([x for x, _ in self._lat])
-            o = np.array([y for _, y in self._lat])
+        """The current fit, computed from the time-sorted sample view
+        (cached until the next ``observe``)."""
+        if self._cached is not None:
+            return self._cached
+        ratio_lat: Optional[float] = None
+        ratio_en: Optional[float] = None
+        a = self.alpha
+        for _, pl, ol, pe, oe in self._entries:
+            r = ol / pl
+            ratio_lat = r if ratio_lat is None \
+                else (1 - a) * ratio_lat + a * r
+            if pe > 0 and oe > 0:
+                re_ = oe / pe
+                ratio_en = re_ if ratio_en is None \
+                    else (1 - a) * ratio_en + a * re_
+        scale = ratio_lat if ratio_lat is not None else 1.0
+        bias = 0.0
+        win = self._entries[-self.window:]
+        if len(win) >= self.min_lsq_samples:
+            p = np.array([e[1] for e in win])
+            o = np.array([e[2] for e in win])
             # degenerate spread (all predictions identical) → ratio only
             if float(p.std()) > 1e-9 * max(float(p.mean()), 1e-30):
                 A = np.stack([p, np.ones_like(p)], axis=1)
-                (a, b), *_ = np.linalg.lstsq(A, o, rcond=None)
+                (sl, b), *_ = np.linalg.lstsq(A, o, rcond=None)
                 # accept the affine fit only if it actually beats the
                 # ratio on the window — outliers (compile spikes, load
                 # bursts) can drive LSQ to wild slopes/negative intercepts
-                if a > 0:
-                    lsq_err = np.mean(np.abs(np.maximum(a * p + b, 1e-12)
+                if sl > 0:
+                    lsq_err = np.mean(np.abs(np.maximum(sl * p + b, 1e-12)
                                              - o) / o)
-                    ratio_err = np.mean(np.abs(self._ratio_lat * p - o) / o)
+                    ratio_err = np.mean(np.abs(scale * p - o) / o)
                     if lsq_err < ratio_err:
-                        scale, bias = float(a), float(b)
-        return Calibration(latency_scale=scale, latency_bias_s=bias,
-                           energy_scale=self._ratio_en, samples=self._n)
+                        scale, bias = float(sl), float(b)
+        self._cached = Calibration(
+            latency_scale=scale, latency_bias_s=bias,
+            energy_scale=ratio_en if ratio_en is not None else 1.0,
+            samples=self._n)
+        return self._cached
 
 
 class TelemetryStore:
     """Fleet-wide record store with per-(tier, channel) crowd-shared and
-    per-(device, channel) calibrators."""
+    per-(device, channel) calibrators.
+
+    ``record`` routes each :class:`MeasurementRecord` into both its
+    tier's pooled calibrator and its device's private one, keyed on the
+    record's measurement channel; lookups return fitted
+    :class:`Calibration` objects (identity until a key has samples).
+    Because calibrators merge by record timestamp, the store accepts
+    out-of-order arrival — late reports from slow fleet members slot
+    into their proper place in every fit."""
 
     def __init__(self, window: int = 64, alpha: float = 0.3,
                  min_lsq_samples: int = 8):
@@ -124,6 +194,9 @@ class TelemetryStore:
 
     # ------------------------------------------------------------ intake --
     def record(self, rec: MeasurementRecord) -> None:
+        """Ingest one observation (any arrival order): append to the
+        audit log and merge into the ``(tier, channel)`` and
+        ``(device, channel)`` calibrators at its timestamp."""
         self.records.append(rec)
         for key, table in (((rec.tier, rec.channel), self._by_tier),
                            ((rec.device_id, rec.channel), self._by_device)):
@@ -132,16 +205,22 @@ class TelemetryStore:
             table[key].observe(rec.predicted_latency_s,
                                rec.observed_latency_s,
                                rec.predicted_energy_j,
-                               rec.observed_energy_j)
+                               rec.observed_energy_j,
+                               timestamp_s=rec.timestamp_s,
+                               key=(rec.device_id, rec.tick))
 
     # ----------------------------------------------------------- lookup ---
     def calibration_for_tier(self, tier: str,
                              channel: str = SIMULATED) -> Calibration:
+        """The crowd-shared fit for one ``(tier, channel)`` pool — what a
+        fresh same-tier device should correct its estimates with."""
         c = self._by_tier.get((tier, channel))
         return c.calibration() if c else Calibration()
 
     def calibration_for_device(self, device_id: str,
                                channel: str = SIMULATED) -> Calibration:
+        """One device's private fit on one channel (the non-crowd-shared
+        regime, capturing its individual silicon)."""
         c = self._by_device.get((device_id, channel))
         return c.calibration() if c else Calibration()
 

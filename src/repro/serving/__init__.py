@@ -1,3 +1,15 @@
+"""Slot-batched continuous-batching serving layer.
+
+:class:`ServingEngine` packs asynchronous :class:`Request` objects into
+fixed decode slots and advances all of them in one jitted, cache-donated
+step per tick (``decode_mode="batched"``; the per-slot reference loop
+survives as ``decode_mode="per_slot"``).  :class:`CompileCache` shares
+jitted decode/prefill programs across engines keyed on ``(cfg, opts,
+slots, max_seq, compile_domain)`` — same-platform fleet members compile
+once — with :data:`GLOBAL_COMPILE_CACHE` as the process-wide default.
+:class:`ServeStats` counts steps/tokens/prefills/recompiles, and the
+engine's ``step_time_ewma_s`` / ``on_step`` hooks are the measured
+back-end feed the fleet's telemetry and event scheduler consume."""
 from .compile_cache import (CompileCache, GLOBAL_COMPILE_CACHE,
                             ServePrograms)
 from .engine import Request, ServeStats, ServingEngine

@@ -47,6 +47,14 @@ from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, ServePrograms
 
 @dataclass
 class Request:
+    """One generation request in the serving queue.  ``rid`` is the
+    caller's identifier (echoed back, never interpreted); ``prompt`` is
+    the int32 token array to prefill; ``max_new_tokens`` bounds the
+    generated continuation (the prefill's first sampled token counts
+    toward it).  The engine fills the remaining fields: ``generated``
+    accumulates sampled tokens, ``done`` flips when the budget or
+    ``max_seq`` is reached, and the ``*_s`` stamps record queue/latency
+    milestones on the caller's clock."""
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
@@ -60,6 +68,12 @@ class Request:
 
 @dataclass
 class ServeStats:
+    """Counters for one engine's lifetime: decode ``steps`` taken,
+    ``tokens_out`` emitted (prefill + decode), ``prefills`` run, and
+    ``recompiles`` — the number of jitted programs *this* engine's
+    requests caused to be built (0 on an engine that found everything in
+    a warm :class:`CompileCache`, which is how fleet-wide program
+    sharing is asserted)."""
     steps: int = 0
     tokens_out: int = 0
     prefills: int = 0
@@ -71,7 +85,22 @@ class ServeStats:
 
 
 class ServingEngine:
-    """Slot-based continuous batching over the unified decode API."""
+    """Slot-based continuous batching over the unified decode API.
+
+    ``slots`` fixes the decode batch width (requests beyond it queue);
+    ``max_seq`` bounds prompt+generation length per slot.
+    ``decode_mode`` selects the decode path: ``"batched"`` (default)
+    advances every slot in one vmapped, cache-donating jit call with
+    on-device argmax and a single bulk transfer per tick, while
+    ``"per_slot"`` is the reference loop — one jit call and host sync
+    per active slot — kept for equivalence tests and benchmarking (token
+    streams are bit-identical across modes).  ``compile_cache`` /
+    ``compile_domain`` wire the engine into cross-engine program
+    sharing: programs are keyed on ``(cfg, opts, slots, max_seq,
+    domain)``, and ``compile_domain`` namespaces the key by compile
+    target (platform/ISA) since a pixel_6 cannot reuse a jetson's
+    binaries — the fleet controller passes each device's
+    :attr:`DeviceSpec.compile_domain` here."""
 
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int = 8,
                  max_seq: int = 512, opts: RuntimeOptions = DEFAULT_OPTIONS,
@@ -101,6 +130,7 @@ class ServingEngine:
         # channel the fleet's TelemetryStore subscribes to.
         self.step_times: Deque[float] = deque(maxlen=2048)
         self.on_step: Optional[Callable[[float, int, int], None]] = None
+        self._step_ewma: Optional[float] = None
 
     # ------------------------------------------------------------ programs --
     def _bind_programs(self) -> ServePrograms:
@@ -232,9 +262,21 @@ class ServingEngine:
         self.stats.tokens_out += emitted
         dt = time.perf_counter() - t0
         self.step_times.append(dt)
+        self._step_ewma = (dt if self._step_ewma is None
+                           else 0.8 * self._step_ewma + 0.2 * dt)
         if self.on_step is not None:
             self.on_step(dt, emitted, self.generation)
         return emitted
+
+    @property
+    def step_time_ewma_s(self) -> Optional[float]:
+        """Smoothed recent decode-step wall time (seconds), or ``None``
+        before the first step.  This is the step-timing hook the fleet's
+        event scheduler consults: an engine-backed device's next wake is
+        its envelope period *plus* ``steps_per_tick × step_time_ewma_s``,
+        so devices whose engines slow down under load automatically tick
+        less often."""
+        return self._step_ewma
 
     def drain(self, max_steps: int = 10_000) -> None:
         while self.has_work and max_steps:

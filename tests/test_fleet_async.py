@@ -1,0 +1,220 @@
+"""Event-driven fleet stepping: per-device tick rates, out-of-order
+telemetry arrival, lockstep parity, and the tick-rate envelope."""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.fleet import (ENGINE, FleetController, LIGHT, SIMULATED,
+                         TIER_TICK_S, EwmaLsqCalibrator, MeasurementRecord,
+                         TelemetryStore, build_fleet, fleet_report,
+                         make_device)
+from repro.models.configs import InputShape
+
+CFG = get_config("paper-backbone")
+SHAPE = InputShape("fleet_a", 256, 4, "prefill")
+
+
+# ------------------------------------------------------- tick envelope ----
+def test_tick_envelope_scales_and_clamps():
+    spec = make_device("pixel_6_cpu", 0)
+    env = spec.tick_envelope
+    assert env.nominal_s == pytest.approx(TIER_TICK_S[LIGHT])
+    assert env.min_s == env.nominal_s
+    assert env.max_s == pytest.approx(env.nominal_s / spec.dvfs_floor)
+    # clamp bounds a DVFS-derated period into the envelope
+    assert env.clamp(0.0) == env.min_s
+    assert env.clamp(1e9) == env.max_s
+    slowed = dataclasses.replace(spec, tick_scale=8.0)
+    assert slowed.tick_envelope.nominal_s == pytest.approx(8 * env.nominal_s)
+
+
+def test_heavy_tier_ticks_faster_than_light():
+    heavy = make_device("tpu_v5e", 0)
+    light = make_device("pixel_6_cpu", 0)
+    assert heavy.tick_envelope.nominal_s < light.tick_envelope.nominal_s
+
+
+# ------------------------------------------- out-of-order telemetry -------
+def _records(n, seed=0, tier=LIGHT, channel=SIMULATED, devices=("a", "b")):
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        p = float(rng.uniform(0.1, 1.0))
+        recs.append(MeasurementRecord(
+            device_id=devices[i % len(devices)], tier=tier, tick=i,
+            predicted_latency_s=p, observed_latency_s=1.5 * p + 0.02,
+            predicted_energy_j=p, observed_energy_j=1.3 * p,
+            channel=channel, timestamp_s=float(rng.uniform(0, 50))))
+    return recs
+
+
+def test_shuffled_arrival_gives_identical_tier_fit():
+    """The acceptance property: any arrival permutation of one record
+    set produces the bit-identical (tier, channel) calibrator fit."""
+    recs = _records(48)
+    in_order = TelemetryStore()
+    for r in sorted(recs, key=lambda r: r.timestamp_s):
+        in_order.record(r)
+    rng = random.Random(7)
+    for trial in range(3):
+        shuffled = TelemetryStore()
+        perm = list(recs)
+        rng.shuffle(perm)
+        for r in perm:
+            shuffled.record(r)
+        assert shuffled.calibration_for_tier(LIGHT) \
+            == in_order.calibration_for_tier(LIGHT)
+        assert shuffled.calibration_for_device("a") \
+            == in_order.calibration_for_device("a")
+
+
+def test_shuffled_arrival_identical_per_channel():
+    recs = _records(30, seed=1) + _records(
+        30, seed=2, channel=ENGINE, devices=("e",))
+    a, b = TelemetryStore(), TelemetryStore()
+    for r in recs:
+        a.record(r)
+    perm = list(recs)
+    random.Random(3).shuffle(perm)
+    for r in perm:
+        b.record(r)
+    for chan in (SIMULATED, ENGINE):
+        assert a.calibration_for_tier(LIGHT, chan) \
+            == b.calibration_for_tier(LIGHT, chan)
+
+
+def test_calibrator_timestamp_merge_matches_in_order():
+    """Direct calibrator API: late-arriving older samples land in their
+    sorted position, so the fit equals the in-order one."""
+    rng = np.random.default_rng(4)
+    samples = [(float(t), float(p), 1.4 * float(p) + 0.1)
+               for t, p in zip(rng.uniform(0, 9, 24), rng.uniform(0.5, 2, 24))]
+    fwd, shuf = EwmaLsqCalibrator(), EwmaLsqCalibrator()
+    for t, p, o in sorted(samples):
+        fwd.observe(p, o, p, 1.2 * p, timestamp_s=t, key=("d", 0))
+    perm = list(samples)
+    random.Random(5).shuffle(perm)
+    for t, p, o in perm:
+        shuf.observe(p, o, p, 1.2 * p, timestamp_s=t, key=("d", 0))
+    assert fwd.calibration() == shuf.calibration()
+    assert fwd.calibration().latency_scale == pytest.approx(1.4, rel=0.05)
+
+
+def test_event_fleet_reports_arrive_out_of_order():
+    """Under event stepping with reporting jitter, the store's arrival
+    log is NOT sorted by observation timestamp — yet fits stay clean."""
+    ctl = FleetController(build_fleet(6, seed=0), CFG, SHAPE,
+                          trace_ticks=16)
+    ctl.run(16)
+    stamps = [r.timestamp_s for r in ctl.telemetry.records]
+    assert stamps != sorted(stamps)          # genuinely out of order
+    rep = fleet_report(ctl)
+    for t in rep.tiers:
+        assert t.mape_after < t.mape_before
+
+
+# -------------------------------------------------- differential rates ----
+def test_fast_devices_accumulate_3x_ticks_of_slowed_device():
+    """Acceptance: with one artificially slowed member, fast-tier
+    devices take ≥3× as many wakes over the same simulated horizon."""
+    fast = make_device("tpu_v5e", 0)
+    slow = dataclasses.replace(make_device("pixel_6_cpu", 0),
+                               tick_scale=8.0)
+    ctl = FleetController([fast, slow], CFG, SHAPE, trace_ticks=400)
+    ctl.run_for(40.0)
+    ticks = ctl.tick_counts
+    assert ticks[slow.device_id] >= 1
+    assert ticks[fast.device_id] >= 3 * ticks[slow.device_id]
+    # every record of the slow device is strictly ordered on the clock,
+    # and fast-device records interleave between them
+    rep = fleet_report(ctl)
+    assert rep.device_ticks == ticks
+    assert rep.clock_skew_s > 0
+
+
+def test_event_mode_slow_device_never_gates_fast():
+    """The fast device's wake cadence is independent of the slow one:
+    removing the slow member leaves the fast member's tick count (and
+    its decision sequence) unchanged."""
+    fast = make_device("tpu_v5e", 0)
+    slow = dataclasses.replace(make_device("pixel_6_cpu", 0),
+                               tick_scale=16.0)
+    ctl_pair = FleetController([fast, slow], CFG, SHAPE, trace_ticks=200,
+                               share_calibration=False)
+    ctl_solo = FleetController([fast], CFG, SHAPE, trace_ticks=200,
+                               share_calibration=False)
+    ctl_pair.run_for(20.0)
+    ctl_solo.run_for(20.0)
+    assert ctl_pair.tick_counts[fast.device_id] \
+        == ctl_solo.tick_counts[fast.device_id]
+
+
+# --------------------------------------------------------- lockstep -------
+def test_lockstep_reproduces_per_tick_parity():
+    """Acceptance: step_mode='lockstep' keeps every device on the same
+    global tick — per-step record sets cover the whole fleet, tick
+    counts stay equal, and the report shows zero clock skew."""
+    fleet = build_fleet(6, seed=0)
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=12,
+                          step_mode="lockstep")
+    for step in range(1, 13):
+        recs = ctl.step()
+        assert len(recs) == len(fleet)
+        assert {r.tick for r in recs} == {step}
+        assert {r.timestamp_s for r in recs} == {float(step)}
+    assert set(ctl.tick_counts.values()) == {12}
+    assert fleet_report(ctl).clock_skew_s == 0.0
+    # the fleet-clock violation window agrees with the tick window under
+    # lockstep (timestamps ARE the global ticks) and the halves add up
+    assert ctl.violations(first_s=1.0, last_s=6.0) \
+        == ctl.violations(first_tick=1, last_tick=6)
+    assert ctl.violations(last_s=6.0) + ctl.violations(first_s=6.5) \
+        == ctl.violations()
+
+
+def test_lockstep_and_event_modes_are_both_deterministic():
+    for mode in ("event", "lockstep"):
+        runs = []
+        for _ in range(2):
+            ctl = FleetController(build_fleet(6, seed=0), CFG, SHAPE,
+                                  trace_ticks=10, step_mode=mode, seed=0)
+            ctl.run(10)
+            runs.append([(r.device_id, r.tick, r.timestamp_s, r.observed_s)
+                         for r in ctl.records])
+        assert runs[0] == runs[1], mode
+
+
+def test_run_for_requires_event_mode():
+    ctl = FleetController(build_fleet(3, seed=0), CFG, SHAPE,
+                          trace_ticks=4, step_mode="lockstep")
+    with pytest.raises(RuntimeError):
+        ctl.run_for(1.0)
+    with pytest.raises(ValueError):
+        FleetController(build_fleet(3, seed=0), CFG, SHAPE,
+                        step_mode="async")
+
+
+# ------------------------------------------------- engine timing hook -----
+def test_engine_step_ewma_feeds_next_wake():
+    """An engine-backed device's wake period grows by steps_per_tick ×
+    the engine's measured step-time EWMA."""
+    class _Eng:
+        has_work = True
+        step_times = []
+        step_time_ewma_s = 0.5
+
+        def step(self):
+            self.step_times.append(0.5)
+
+    fleet = [make_device("pixel_6_cpu", 0)]
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=100)
+    base = FleetController(fleet, CFG, SHAPE, trace_ticks=100)
+    ctl.attach_engine(fleet[0].device_id, _Eng(), steps_per_tick=2)
+    ctl.run_for(12.0)
+    base.run_for(12.0)
+    # period ≈ 1.0s envelope + 2 × 0.5s measured = ~2× slower cadence
+    assert ctl.tick_counts[fleet[0].device_id] \
+        < base.tick_counts[fleet[0].device_id]

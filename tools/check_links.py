@@ -1,0 +1,95 @@
+#!/usr/bin/env python3
+"""Check that internal markdown links in README.md and docs/ resolve.
+
+For every ``[text](target)`` in the scanned files:
+
+* external targets (``http(s)://``, ``mailto:``) are skipped;
+* relative file targets must exist on disk (resolved against the
+  linking file's directory);
+* fragment targets (``#heading`` or ``file.md#heading``) must match a
+  heading in the target file, using GitHub's anchor slugging.
+
+Exits non-zero listing every broken link.  No dependencies; used by the
+CI docs job next to ``python -m compileall src``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"(?<!!)\[[^\]]*\]\(([^)\s]+)\)")
+INLINE_CODE = re.compile(r"`[^`]*`")
+FENCE = re.compile(r"^(```|~~~)")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor for a markdown heading."""
+    h = INLINE_CODE.sub(lambda m: m.group(0).strip("`"), heading)
+    h = h.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings(path: Path) -> set:
+    slugs, counts = set(), {}
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence or not line.startswith("#"):
+            continue
+        slug = slugify(line.lstrip("#"))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def links_in(path: Path):
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if FENCE.match(line.strip()):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK.finditer(INLINE_CODE.sub("", line)):
+            yield m.group(1)
+
+
+def check(files) -> int:
+    broken = []
+    for md in files:
+        for target in links_in(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = md if not path_part \
+                else (md.parent / path_part).resolve()
+            if not dest.exists():
+                broken.append(f"{md.relative_to(ROOT)}: {target} "
+                              f"(missing file)")
+                continue
+            if frag and dest.suffix == ".md" \
+                    and slugify(frag.replace("-", " ")) not in headings(dest) \
+                    and frag not in headings(dest):
+                broken.append(f"{md.relative_to(ROOT)}: {target} "
+                              f"(missing heading)")
+    for b in broken:
+        print(f"BROKEN  {b}")
+    print(f"checked {len(files)} files: "
+          f"{'FAIL' if broken else 'ok'} ({len(broken)} broken)")
+    return 1 if broken else 0
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("**/*.md"))
+    files = [f for f in files if f.exists()]
+    return check(files)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
