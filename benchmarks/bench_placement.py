@@ -1,0 +1,172 @@
+"""Fleet-aware cross-device placement: live peers vs static pools.
+
+Three measurements on the ISSUE's acceptance scenario — a loaded
+phone-tier member sharing a site with idle helpers:
+
+1. **Predicted latency**: the FleetPlacer chain vs local-only execution
+   vs the static ``edge_pair`` pool (the best the old placer could do).
+2. **End-to-end p95**: the same fleet run through ``FleetController``
+   with placement off vs on — the phone's observed per-wake latency
+   distribution with and without same-site helpers.
+3. **Re-placement reaction**: after a simulated helper slowdown
+   (``inject_load``), how many clock events (device wakes) and how much
+   simulated time pass before the controller moves the work.
+
+Results go to stdout (``name,us_per_call,derived`` CSV) and to
+``BENCH_placement.json`` for trend tracking.
+
+  PYTHONPATH=src python -m benchmarks.bench_placement [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.monitor import ResourceContext, constant_trace
+from repro.fleet import FleetController, FleetPlacer, make_device
+from repro.models.configs import InputShape
+from repro.offload import DEVICE_POOLS, place_dp
+
+from .common import emit, header
+
+JSON_PATH = "BENCH_placement.json"
+HORIZON_S, QUICK_HORIZON_S = 24.0, 8.0
+REACT_S, QUICK_REACT_S = 8.0, 4.0
+
+# the phone under load: throttled, contended, memory-pressured
+LOADED = ResourceContext(cpu_temp_derate=0.45, competing_procs=4,
+                         battery_frac=0.8, mem_free_frac=0.7)
+PHONE_SLA_S = 0.5
+
+
+def _fleet():
+    """Loaded phone + two idle same-site jetson helpers + a WAN server."""
+    return (make_device("pixel_6_cpu", 0, site="home"),
+            make_device("jetson_agx_orin", 0, site="home"),
+            make_device("jetson_agx_orin", 1, site="home"),
+            make_device("edge_server_a100", 0, site="dc"))
+
+
+def _trace_factory(phone_id):
+    def tf(spec, n):
+        return constant_trace(
+            LOADED if spec.device_id == phone_id else ResourceContext(), n)
+    return tf
+
+
+def _controller(fleet, cfg, shape, placement: bool) -> FleetController:
+    ctl = FleetController(
+        list(fleet), cfg, shape, trace_ticks=4000,
+        trace_factory=_trace_factory(fleet[0].device_id),
+        placement=placement, allow_offload=False,
+        warmup_ticks=4, recalibrate_every=2)
+    ctl.set_sla(fleet[0].device_id, PHONE_SLA_S)
+    return ctl
+
+
+def run(quick: bool = False, json_path: str = JSON_PATH) -> None:
+    header("fleet-aware cross-device placement")
+    cfg = get_config("paper-backbone")
+    shape = InputShape("fleet", 256, 4, "prefill")
+    horizon = QUICK_HORIZON_S if quick else HORIZON_S
+    react_horizon = QUICK_REACT_S if quick else REACT_S
+    fleet = _fleet()
+    phone = fleet[0]
+    results = {"config": {"quick": quick, "arch": cfg.name,
+                          "devices": [d.device_id for d in fleet],
+                          "sites": {d.device_id: d.site for d in fleet},
+                          "phone_sla_s": PHONE_SLA_S,
+                          "horizon_s": horizon}}
+
+    # ---- 1. predicted: fleet chain vs local vs static pool -------------
+    placer = FleetPlacer(cfg)
+    for d in fleet:
+        placer.register(d)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    dec = placer.place(phone.device_id)
+    local_s = placer.local_decision(phone.device_id).latency_s
+    static_s = place_dp(placer.pp, DEVICE_POOLS["edge_pair"]).latency_s
+    results["predicted"] = {
+        "local_only_s": local_s,
+        "edge_pair_s": static_s,
+        "fleet_s": dec.latency_s,
+        "hosts": list(dec.hosts),
+        "migration_s": dec.migration_s,
+        "speedup_vs_local": local_s / dec.latency_s,
+        "speedup_vs_edge_pair": static_s / dec.latency_s,
+    }
+    emit("placement.predicted", dec.latency_s * 1e6,
+         f"local_us={local_s*1e6:.0f};edge_pair_us={static_s*1e6:.0f};"
+         f"x_local={local_s/dec.latency_s:.1f};"
+         f"x_edge_pair={static_s/dec.latency_s:.1f};"
+         f"hosts={'>'.join(dec.hosts)}")
+
+    # ---- 2. end-to-end p95 with vs without same-site helpers -----------
+    p95 = {}
+    for label, placement in (("local_only", False), ("fleet", True)):
+        ctl = _controller(fleet, cfg, shape, placement)
+        ctl.run_for(horizon)
+        obs = np.array([r.observed_s for r in ctl.records
+                        if r.device_id == phone.device_id])
+        # skip the calibration/placement warmup half for a steady-state
+        # distribution (identical window for both modes)
+        steady = obs[len(obs) // 2:]
+        p95[label] = {
+            "p95_s": float(np.percentile(steady, 95)),
+            "mean_s": float(steady.mean()),
+            "wakes": int(len(obs)),
+            "violations": ctl.violations(),
+        }
+        if placement:
+            results["placement_events"] = ctl.placement_events
+    speedup = p95["local_only"]["p95_s"] / max(p95["fleet"]["p95_s"], 1e-12)
+    results["phone_p95"] = {**{f"{k}_{f}": v for k, d in p95.items()
+                               for f, v in d.items()},
+                           "p95_speedup": speedup}
+    emit("placement.p95", p95["fleet"]["p95_s"] * 1e6,
+         f"local_only_us={p95['local_only']['p95_s']*1e6:.0f};"
+         f"speedup={speedup:.1f};"
+         f"viol_local={p95['local_only']['violations']};"
+         f"viol_fleet={p95['fleet']['violations']}")
+
+    # ---- 3. reaction to a helper slowdown ------------------------------
+    ctl = _controller(fleet, cfg, shape, True)
+    ctl.run_for(horizon / 2)
+    before = ctl.placement_of(phone.device_id)
+    chosen = before.hosts[1] if before.offloaded else None
+    reaction = {"placed_before": before.describe()}
+    if chosen is not None:
+        t0, w0 = ctl.now_s, ctl.wakes
+        ctl.inject_load(chosen, 0.9)
+        ctl.run_for(react_horizon)
+        moves = [(ts, w, d) for ts, w, d in ctl.placement_log
+                 if d.requester == phone.device_id and w >= w0]
+        after = ctl.placement_of(phone.device_id)
+        reaction.update({
+            "slowed_helper": chosen,
+            "reacted": bool(moves) and after.hosts != before.hosts,
+            "reaction_events": moves[0][1] - w0 if moves else -1,
+            "reaction_s": moves[0][0] - t0 if moves else -1.0,
+            "placed_after": after.describe(),
+        })
+        emit("placement.reaction",
+             (moves[0][0] - t0) * 1e6 if moves else 0.0,
+             f"events={reaction['reaction_events']};"
+             f"reacted={int(reaction['reacted'])};"
+             f"from={chosen};to={'>'.join(after.hosts)}")
+    results["reaction"] = reaction
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json)

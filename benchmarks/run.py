@@ -12,7 +12,8 @@ import time
 import traceback
 
 SUITES = ("overall", "dynamic_budgets", "elastic", "offload", "engine",
-          "ablation", "case_study", "tta", "roofline", "fleet", "serving")
+          "ablation", "case_study", "tta", "roofline", "fleet", "serving",
+          "placement")
 
 
 def main() -> None:

@@ -18,9 +18,22 @@ from repro.engine.schedule import EngineConfig
 
 @dataclass(frozen=True)
 class OffloadChoice:
+    """θ_o: where (and at what granularity) to place the partitioned
+    model.
+
+    ``pool`` names the placement target.  With empty ``peers`` it is a
+    key into the static ``repro.offload.placer.DEVICE_POOLS`` (or a
+    mesh-slice pipeline).  When ``peers`` is non-empty the target is a
+    chain of live *fleet members* — ``peers[0]`` is the requesting
+    device itself, the rest are helper device-ids — and the evaluator
+    resolves it through its installed ``pool_resolver`` (the fleet
+    placer synthesizing calibrated live profiles) instead of the static
+    table; ``pool`` then serves only as a display label (``"fleet"``).
+    """
     enabled: bool = False
-    pool: str = "edge_pair"      # DEVICE_POOLS key / mesh-slice pipeline
+    pool: str = "edge_pair"      # DEVICE_POOLS key, or "fleet" with peers
     level: int = 2               # pre-partition granularity
+    peers: Tuple[str, ...] = ()  # live fleet chain; [0] = requester
 
 
 @dataclass(frozen=True)
@@ -31,7 +44,9 @@ class Action:
 
     def describe(self) -> str:
         ops = "+".join(self.variant.operators()) or "full"
-        off = (f"offload[{self.offload.pool}/L{self.offload.level}]"
+        target = (">".join(self.offload.peers) if self.offload.peers
+                  else self.offload.pool)
+        off = (f"offload[{target}/L{self.offload.level}]"
                if self.offload.enabled else "local")
         eng = (f"fuse={int(self.engine.fuse)},remat={self.engine.remat_policy},"
                f"kv={self.engine.kv_cache_dtype},streams={self.engine.parallel_streams}")

@@ -18,7 +18,9 @@ from repro.elastic.operators import FULL_SPEC, VariantSpec
 from repro.elastic.supernet import ElasticSupernet
 from repro.models.configs import InputShape, ModelConfig
 
-from .actions import Action, default_action_space
+from repro.engine.schedule import EngineConfig
+
+from .actions import Action, OffloadChoice, default_action_space
 from .monitor import ResourceContext, ResourceMonitor
 from .optimizer import (ActionEvaluator, Budgets, Evaluation, evolve_pareto,
                         nondominated_front, select_online)
@@ -54,13 +56,30 @@ class AdaptationLoop:
                           VariantSpec(depth_ratio=0.75),
                           VariantSpec(width_ratio=0.5),
                           VariantSpec(rank_ratio=0.5, width_ratio=0.5)))
+        self._variants = tuple(variants)
         self.actions = default_action_space(
             variants, allow_offload=self.allow_offload,
             decode=self.shape.is_decode)
+        self._base_actions = self.actions
         self.front: List[Evaluation] = []
         self.current: Optional[Decision] = None
         self.decisions: List[Decision] = []
         self._tick = 0
+
+    # --------------------------------------------------- placement targets --
+    def set_offload_targets(self, choices: Sequence[OffloadChoice]) -> None:
+        """Install fleet-peer offload targets into the action space.
+
+        Each choice (typically one ``OffloadChoice`` with ``peers`` set,
+        produced by the fleet placer) is crossed with the loop's variant
+        ladder and appended to the static action space; previous fleet
+        targets are replaced and the Pareto front invalidated.  An empty
+        sequence strips fleet targets (back to static pools only)."""
+        extra = tuple(Action(variant=v, offload=ch,
+                             engine=EngineConfig(fuse=True))
+                      for ch in choices for v in self._variants)
+        self.actions = self._base_actions + extra
+        self.front = []
 
     # ------------------------------------------------------- calibration --
     def set_calibration(self, cal: Optional[Calibration]) -> None:

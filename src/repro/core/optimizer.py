@@ -25,6 +25,12 @@ from repro.models.configs import InputShape, ModelConfig
 from repro.offload.placer import DEVICE_POOLS, place_dp
 
 from .actions import Action, OffloadChoice
+
+# the modeled accuracy cost of one unit of unmitigated data drift
+# (``accuracy_of`` subtracts DRIFT_ACCURACY_COST × ctx.data_drift); the
+# telemetry accuracy channel uses the same constant to back modeled
+# drift out of crowd-labeled observations before pooling them
+DRIFT_ACCURACY_COST = 0.10
 from .monitor import ResourceContext
 from .profiler import (Calibration, HardwareProfile, TPU_V5E,
                        estimate_energy, estimate_latency, layer_costs)
@@ -39,24 +45,61 @@ class Evaluation:
     action: Action
 
 
+# pre-partitions are pure functions of (cfg, batch, seq); memoize them so
+# re-evaluating offload actions (which the fleet placer makes routine)
+# doesn't rebuild the op graph on every profiler call
+_PP_CACHE: Dict[tuple, object] = {}
+
+
+def _prepartition(cfg: ModelConfig, batch: int, seq: int):
+    key = (cfg, batch, seq)
+    if key not in _PP_CACHE:
+        from repro.offload.graph_ir import build_model_graph
+        from repro.offload.partition import pre_partition
+        if len(_PP_CACHE) > 64:        # bound: variant ladders are small
+            _PP_CACHE.clear()
+        _PP_CACHE[key] = pre_partition(
+            build_model_graph(cfg, batch, seq))
+    return _PP_CACHE[key]
+
+
 class ActionEvaluator:
     """Maps an Action + context -> (A, E, T, M) through the profiler.
 
     Accuracy is a calibrated proxy: monotone in retained FLOPs, penalized
     by unmitigated data drift, with optional measured overrides (the
-    benchmarks inject real accuracies for the paper-backbone model)."""
+    benchmarks inject real accuracies for the paper-backbone model, and
+    the fleet's accuracy telemetry channel feeds crowd-measured values
+    back in here).
+
+    ``pool_resolver`` maps an ``OffloadChoice`` to the device chain it
+    places onto; the default resolves ``offload.pool`` in the static
+    ``DEVICE_POOLS``, while a fleet-attached evaluator gets a resolver
+    that synthesizes live calibrated profiles for ``offload.peers``
+    chains.  A resolver returning an empty chain marks the action
+    infeasible (e.g. every helper in the chain left the fleet)."""
 
     def __init__(self, cfg: ModelConfig, shape: InputShape,
                  hw: HardwareProfile = TPU_V5E, base_accuracy: float = 0.76,
                  measured: Optional[Dict[VariantSpec, float]] = None,
-                 calibration: Optional[Calibration] = None):
+                 calibration: Optional[Calibration] = None,
+                 pool_resolver: Optional[Callable[
+                     [OffloadChoice], Sequence]] = None):
         self.cfg = cfg
         self.shape = shape
         self.hw = hw
         self.base_accuracy = base_accuracy
         self.measured = measured or {}
         self.calibration = calibration
+        self.pool_resolver = pool_resolver
         self._full = variant_cost(cfg, VariantSpec(), shape.seq_len)
+
+    def resolve_pool(self, offload: OffloadChoice) -> Sequence:
+        """The device chain an offload choice places onto (see
+        ``pool_resolver``)."""
+        if self.pool_resolver is not None:
+            return self.pool_resolver(offload)
+        return DEVICE_POOLS[offload.pool]
 
     def _variant_cfg(self, spec: VariantSpec) -> ModelConfig:
         c = self.cfg
@@ -68,16 +111,20 @@ class ActionEvaluator:
                                         // 8 * 8))
         return c
 
+    def proxy_accuracy(self, spec: VariantSpec) -> float:
+        """The drift-free analytic accuracy proxy for one variant —
+        never consults ``measured`` (the telemetry accuracy channel fits
+        crowd observations *against* this value)."""
+        ratio = (variant_cost(self.cfg, spec, self.shape.seq_len)
+                 ["flops_per_token"] / self._full["flops_per_token"])
+        # empirical supernet curve: gentle until ~50% FLOPs, then steep
+        return self.base_accuracy * (1.0 - 0.25 * (1 - ratio) ** 2
+                                     - 0.35 * max(0.0, 0.45 - ratio))
+
     def accuracy_of(self, spec: VariantSpec, ctx: ResourceContext) -> float:
-        if spec in self.measured:
-            a = self.measured[spec]
-        else:
-            ratio = (variant_cost(self.cfg, spec, self.shape.seq_len)
-                     ["flops_per_token"] / self._full["flops_per_token"])
-            # empirical supernet curve: gentle until ~50% FLOPs, then steep
-            a = self.base_accuracy * (1.0 - 0.25 * (1 - ratio) ** 2
-                                      - 0.35 * max(0.0, 0.45 - ratio))
-        a -= 0.10 * ctx.data_drift        # unmitigated drift cost
+        a = (self.measured[spec] if spec in self.measured
+             else self.proxy_accuracy(spec))
+        a -= DRIFT_ACCURACY_COST * ctx.data_drift   # unmitigated drift cost
         return max(a, 0.0)
 
     def evaluate(self, action: Action, ctx: ResourceContext,
@@ -118,12 +165,11 @@ class ActionEvaluator:
 
         # offloading: replace local latency with the placed pipeline's
         if action.offload.enabled:
-            from repro.offload.graph_ir import build_model_graph
-            from repro.offload.partition import pre_partition
-            g = build_model_graph(cfg, 1, min(self.shape.seq_len, 512))
-            pp = pre_partition(g)
-            devices = DEVICE_POOLS[action.offload.pool]
+            pp = _prepartition(cfg, 1, min(self.shape.seq_len, 512))
+            devices = self.resolve_pool(action.offload)
             try:
+                if not devices:
+                    raise ValueError("empty device chain")
                 pl = place_dp(pp, devices, level=action.offload.level)
                 scale = (self.shape.global_batch * self.shape.seq_len
                          / (1 * min(self.shape.seq_len, 512)))

@@ -16,18 +16,25 @@ the legacy one-global-tick-advances-everyone behavior.
 """
 from .controller import (DEFAULT_SHAPE, STEP_MODES, FleetController,
                          FleetTickRecord)
-from .registry import (DeviceSpec, HEAVY, LIGHT, MEDIUM, PLATFORMS,
-                       PlatformProfile, TIER_TICK_S, TIERS, TickEnvelope,
-                       build_fleet, device_trace, make_device,
-                       platforms_by_tier)
+from .placement import (FleetPlacer, LinkSpec, MemberState,
+                        PlacementDecision, SiteTopology,
+                        synthesize_profile)
+from .registry import (DEFAULT_SITE, DeviceSpec, HEAVY, LIGHT, MEDIUM,
+                       PLATFORMS, PlatformProfile, TIER_TICK_S, TIERS,
+                       TickEnvelope, build_fleet, device_trace,
+                       make_device, platforms_by_tier)
 from .report import FleetReport, TierSummary, fleet_report
-from .telemetry import (CHANNELS, ENGINE, SIMULATED, EwmaLsqCalibrator,
+from .telemetry import (ACCURACY, CHANNELS, ENGINE, SIMULATED,
+                        AccuracyRecord, EwmaLsqCalibrator,
                         MeasurementRecord, TelemetryStore)
 
 __all__ = ["DEFAULT_SHAPE", "STEP_MODES", "FleetController",
-           "FleetTickRecord", "DeviceSpec", "HEAVY", "LIGHT", "MEDIUM",
+           "FleetTickRecord", "FleetPlacer", "LinkSpec", "MemberState",
+           "PlacementDecision", "SiteTopology", "synthesize_profile",
+           "DEFAULT_SITE", "DeviceSpec", "HEAVY", "LIGHT", "MEDIUM",
            "PLATFORMS", "PlatformProfile", "TIER_TICK_S", "TIERS",
            "TickEnvelope", "build_fleet", "device_trace", "make_device",
            "platforms_by_tier", "FleetReport", "TierSummary",
-           "fleet_report", "CHANNELS", "ENGINE", "SIMULATED",
-           "EwmaLsqCalibrator", "MeasurementRecord", "TelemetryStore"]
+           "fleet_report", "ACCURACY", "CHANNELS", "ENGINE", "SIMULATED",
+           "AccuracyRecord", "EwmaLsqCalibrator", "MeasurementRecord",
+           "TelemetryStore"]

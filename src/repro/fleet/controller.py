@@ -32,15 +32,17 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
-from repro.core.actions import Action
+from repro.core.actions import Action, OffloadChoice
 from repro.core.loop import AdaptationLoop, Decision
 from repro.core.monitor import ResourceContext
-from repro.core.optimizer import Budgets
+from repro.core.optimizer import DRIFT_ACCURACY_COST, Budgets
 from repro.models.configs import InputShape, ModelConfig
 from repro.serving import CompileCache
 
+from .placement import FleetPlacer, PlacementDecision, SiteTopology
 from .registry import DeviceSpec, device_trace
-from .telemetry import ENGINE, SIMULATED, MeasurementRecord, TelemetryStore
+from .telemetry import (ENGINE, SIMULATED, AccuracyRecord,
+                        MeasurementRecord, TelemetryStore)
 
 # the workload shape fleet loops adapt for unless a caller overrides it
 DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
@@ -48,6 +50,10 @@ DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
 # "event": min-heap of per-device next-wake times (default);
 # "lockstep": legacy synchronized stepping, one global tick for everyone
 STEP_MODES = ("event", "lockstep")
+
+# reserved heap id for fleet-wide re-placement wakes ("<" cannot appear
+# in a device_id, which is always "<platform>#<index>")
+_PLACEMENT_WAKE = "<placement>"
 
 
 @dataclass
@@ -83,6 +89,7 @@ class _DeviceRuntime:
     engine_steps: int = 4
     exhausted: bool = False
     ticks: int = 0                # wakes taken so far
+    dropped: bool = False         # left the fleet (drop_device)
 
 
 class FleetController:
@@ -110,6 +117,11 @@ class FleetController:
                  compile_cache: Optional[CompileCache] = None,
                  step_mode: str = "event",
                  telemetry_jitter_s: Optional[float] = None,
+                 placement: bool = False,
+                 topology: Optional[SiteTopology] = None,
+                 placement_every_s: Optional[float] = None,
+                 placement_drift: float = 0.15,
+                 placement_hysteresis: float = 0.15,
                  seed: int = 0):
         if step_mode not in STEP_MODES:
             raise ValueError(f"unknown step_mode {step_mode!r}; "
@@ -177,6 +189,28 @@ class FleetController:
             # fleet doesn't start phase-locked
             self._push(d.spec.tick_envelope.nominal_s * i / n,
                        d.spec.device_id)
+        # ---- cross-device placement (the fleet IS the device pool) ----
+        self.placement = placement
+        self.placer: Optional[FleetPlacer] = None
+        self.placement_log: List[Tuple[float, int, PlacementDecision]] = []
+        self.placement_events = 0     # re-placement sweeps run
+        self._wakes = 0               # device wakes processed (clock events)
+        self._placement_drift = placement_drift
+        self._place_period_s = (placement_every_s if placement_every_s
+                                is not None else self._cal_period_s)
+        self._next_place_s: Optional[float] = None
+        if placement:
+            self.placer = FleetPlacer(cfg, topology,
+                                      hysteresis=placement_hysteresis)
+            for d in self._devices.values():
+                self.placer.register(d.spec)
+                # placements flow back through the evaluator: fleet-peer
+                # OffloadChoices resolve to live calibrated profiles
+                d.loop.evaluator.pool_resolver = self._resolve_pool
+            if step_mode == "event":
+                # first re-placement after the calibration warmup
+                self._next_place_s = self._warmup_end_s
+                self._push(self._next_place_s, _PLACEMENT_WAKE)
 
     # ----------------------------------------------------------- plumbing --
     @property
@@ -281,6 +315,8 @@ class FleetController:
             d.exhausted = True
             return None, None
         d.ticks += 1
+        self._wakes += 1
+        self._sync_member(d, ctx)
         decision = d.loop.tick(ctx)
         raw = d.loop.evaluator.evaluate(decision.action, ctx,
                                         calibrate=False)
@@ -288,6 +324,8 @@ class FleetController:
         if obs is None:
             return None, ctx
         obs_s, obs_j, chan = obs
+        if chan == SIMULATED:
+            self._observe_accuracy(d, decision, ctx, now_s)
         mrec = MeasurementRecord(
             device_id=d.spec.device_id, tier=d.spec.tier,
             tick=d.ticks,
@@ -307,6 +345,51 @@ class FleetController:
             timestamp_s=now_s)
         self.records.append(rec)
         return rec, ctx
+
+    def _sync_member(self, d: _DeviceRuntime, ctx: ResourceContext) -> None:
+        """Refresh the placer's view of this member (context + serving
+        load) and trigger an immediate re-placement wake when the
+        member's effective speed moved past the drift threshold — a
+        helper throttling down is a placement-relevant event, not just a
+        telemetry sample."""
+        if self.placer is None:
+            return
+        did = d.spec.device_id
+        if did not in self.placer.members:
+            return
+        prev = self.placer.member(did).ctx
+        own_load = None
+        if d.engine is not None:
+            est = getattr(d.engine, "step_time_ewma_s", None)
+            if est:
+                busy = d.engine_steps * est
+                own_load = busy / (busy + d.spec.tick_envelope.nominal_s)
+        self.placer.update_member(did, ctx=ctx, own_load=own_load)
+        drift = abs(ctx.cpu_temp_derate - prev.cpu_temp_derate) \
+            + 0.15 * abs(ctx.competing_procs - prev.competing_procs)
+        if drift >= self._placement_drift:
+            self._schedule_placement(self._now)
+
+    def _observe_accuracy(self, d: _DeviceRuntime, decision: Decision,
+                          ctx: ResourceContext, now_s: float) -> None:
+        """Simulate crowd labeling of the decision's task accuracy: the
+        analytic proxy overshoots by the device's latent accuracy bias,
+        and real drift costs twice what the model budgets.  The record
+        lands in the telemetry accuracy channel; ``recalibrate`` feeds
+        the pooled per-variant estimates back into every same-tier
+        evaluator's ``measured`` dict."""
+        variant = decision.action.variant
+        pure = d.loop.evaluator.proxy_accuracy(variant)
+        noise = max(-0.05, min(0.05,
+                               d.rng.gauss(0.0, self.observation_noise / 3)))
+        true_acc = max(0.0, pure - d.spec.latent_accuracy_bias
+                       - 2.0 * DRIFT_ACCURACY_COST * ctx.data_drift + noise)
+        self.telemetry.record_accuracy(AccuracyRecord(
+            device_id=d.spec.device_id, tier=d.spec.tier, tick=d.ticks,
+            variant=variant,
+            predicted_accuracy=decision.eval.accuracy,
+            observed_accuracy=true_acc,
+            drift=ctx.data_drift, timestamp_s=now_s))
 
     # -------------------------------------------------- telemetry arrival --
     def _report(self, mrec: MeasurementRecord) -> None:
@@ -332,6 +415,117 @@ class FleetController:
     def _push(self, when_s: float, device_id: str) -> None:
         self._seq += 1
         heapq.heappush(self._heap, (when_s, self._seq, device_id))
+
+    # ---------------------------------------------------------- placement --
+    def _schedule_placement(self, when_s: float) -> None:
+        """Pull the next re-placement wake forward to ``when_s`` (no-op
+        when one is already due sooner, or under lockstep — where
+        placement runs on the recalibration cadence instead).  Never
+        pulls a sweep before the calibration warmup ends: placing on
+        zero-sample calibrations would commit a blind placement that
+        hysteresis then defends."""
+        if self.placer is None or self.step_mode != "event":
+            return
+        when_s = max(when_s, self._warmup_end_s)
+        if self._next_place_s is None or when_s < self._next_place_s - 1e-9:
+            self._next_place_s = when_s
+            self._push(when_s, _PLACEMENT_WAKE)
+
+    def _placement_wake(self, when_s: float) -> None:
+        """One popped placement heap entry.  Entries superseded by a
+        pulled-forward wake are stale and skipped; a live one runs the
+        fleet-wide re-placement sweep and schedules the next periodic
+        wake."""
+        if self._next_place_s is not None \
+                and when_s < self._next_place_s - 1e-9:
+            return                      # superseded by an earlier wake
+        self._placement_event(self._now)
+        self._next_place_s = self._now + self._place_period_s
+        self._push(self._next_place_s, _PLACEMENT_WAKE)
+
+    def _placement_event(self, now_s: float) -> None:
+        """Fleet-wide re-placement sweep (a clock event): refresh every
+        member's crowd calibration in the placer, re-place each live
+        requester over the current fleet state, and push changed
+        placements back into that device's action space as fleet-peer
+        ``OffloadChoice`` targets — the optimizer then weighs them
+        against local variants on its next wake."""
+        if self.placer is None:
+            return
+        self.placement_events += 1
+        for d in self._devices.values():
+            if d.spec.device_id not in self.placer.members:
+                continue
+            chan = ENGINE if d.engine is not None else SIMULATED
+            cal = (self.telemetry.calibration_for_tier(d.spec.tier, chan)
+                   if self.share_calibration else
+                   self.telemetry.calibration_for_device(
+                       d.spec.device_id, chan))
+            self.placer.update_member(d.spec.device_id, calibration=cal)
+        for d in self._devices.values():
+            if d.dropped or d.exhausted:
+                continue
+            did = d.spec.device_id
+            prev = self.placer.current(did)
+            dec = self.placer.place(did, now_s=now_s)
+            if prev is not None and dec.hosts == prev.hosts:
+                continue
+            self.placement_log.append((now_s, self._wakes, dec))
+            if dec.offloaded:
+                d.loop.set_offload_targets((OffloadChoice(
+                    enabled=True, pool="fleet", level=self.placer.level,
+                    peers=dec.hosts),))
+            else:
+                d.loop.set_offload_targets(())
+
+    def _resolve_pool(self, offload):
+        """Evaluator hook: fleet-peer choices resolve through the placer
+        to live calibrated profiles; pool keys stay static."""
+        if offload.peers and self.placer is not None:
+            return self.placer.resolve_profiles(offload.peers)
+        from repro.offload.placer import DEVICE_POOLS
+        return DEVICE_POOLS[offload.pool]
+
+    def inject_load(self, device_id: str, own_load: float) -> None:
+        """Externally mark a member as (un)loaded — e.g. a helper whose
+        owner started a game — and pull the next re-placement wake
+        forward so the fleet reacts within a bounded number of clock
+        events."""
+        if self.placer is None:
+            raise RuntimeError("placement is not enabled on this fleet")
+        self.placer.update_member(device_id, own_load=own_load)
+        self._schedule_placement(self._now)
+
+    def drop_device(self, device_id: str) -> List[str]:
+        """A member leaves the fleet mid-run.  Its loop stops waking;
+        any requester whose placement used it falls back to local-only
+        immediately (the placer rewrites their decisions) and their
+        action spaces lose the dead fleet target.  Returns the affected
+        requester ids."""
+        d = self._devices[device_id]
+        d.dropped = True
+        d.exhausted = True
+        if self.placer is None:
+            return []
+        affected = self.placer.remove_member(device_id)
+        for rid in affected:
+            dec = self.placer.current(rid)
+            if rid in self._devices and dec is not None:
+                self._devices[rid].loop.set_offload_targets(())
+                self.placement_log.append((self._now, self._wakes, dec))
+        self._schedule_placement(self._now)
+        return affected
+
+    def placement_of(self, device_id: str) -> Optional[PlacementDecision]:
+        """The device's current placement decision (None before the
+        first sweep or when placement is disabled)."""
+        return self.placer.current(device_id) if self.placer else None
+
+    @property
+    def wakes(self) -> int:
+        """Device wakes processed so far — the clock-event count used to
+        bound re-placement reaction time."""
+        return self._wakes
 
     def _next_period(self, d: _DeviceRuntime,
                      ctx: Optional[ResourceContext]) -> float:
@@ -366,6 +560,9 @@ class FleetController:
             while self._now >= self._next_cal_s:
                 self.recalibrate()
                 self._next_cal_s += self._cal_period_s
+            if did == _PLACEMENT_WAKE:
+                self._placement_wake(when)
+                continue
             d = self._devices[did]
             if d.exhausted:
                 continue
@@ -395,6 +592,8 @@ class FleetController:
         self._tick += 1
         out: List[FleetTickRecord] = []
         for d in self._devices.values():
+            if d.exhausted:           # trace ended or drop_device()
+                continue
             rec, _ = self._advance(d, float(self._tick))
             if rec is not None:
                 out.append(rec)
@@ -402,6 +601,10 @@ class FleetController:
                 and (self._tick - self.warmup_ticks) \
                 % self.recalibrate_every == 0:
             self.recalibrate()
+            if self.placer is not None:
+                # under lockstep, re-placement rides the recalibration
+                # cadence instead of being its own clock event
+                self._placement_event(float(self._tick))
         return out
 
     def run(self, ticks: int) -> List[FleetTickRecord]:
@@ -420,7 +623,11 @@ class FleetController:
         """Push telemetry-fitted corrections back into every loop — tier-
         pooled (crowd-shared) or per-device, always on the device's own
         measurement channel (engine wall-times and simulated silicon live
-        on unrelated scales and must never share a fit)."""
+        on unrelated scales and must never share a fit).  Crowd-measured
+        task accuracy flows back the same way: the tier's per-variant
+        drift-free estimates land in each evaluator's ``measured`` dict,
+        so the accuracy proxy is corrected alongside latency/energy."""
+        acc_by_tier: Dict[str, Dict] = {}
         for d in self._devices.values():
             chan = ENGINE if d.engine is not None else SIMULATED
             if self.share_calibration:
@@ -430,6 +637,13 @@ class FleetController:
                     d.spec.device_id, chan)
             if cal.samples:
                 d.loop.set_calibration(cal)
+            tier = d.spec.tier
+            if tier not in acc_by_tier:
+                acc_by_tier[tier] = \
+                    self.telemetry.measured_accuracy_for_tier(tier)
+            if acc_by_tier[tier]:
+                d.loop.evaluator.measured.update(acc_by_tier[tier])
+                d.loop.front = []
 
     def calibration_of(self, device_id: str):
         return self._devices[device_id].loop.evaluator.calibration

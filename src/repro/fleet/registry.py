@@ -38,6 +38,10 @@ TIERS = (HEAVY, MEDIUM, LIGHT)
 # values are arbitrary simulated seconds.
 TIER_TICK_S: Dict[str, float] = {HEAVY: 0.25, MEDIUM: 0.5, LIGHT: 1.0}
 
+# site a device lives at unless the fleet builder says otherwise — a
+# single-site fleet is the legacy behavior (every peer one LAN hop away)
+DEFAULT_SITE = "site0"
+
 
 @dataclass(frozen=True)
 class TickEnvelope:
@@ -181,6 +185,14 @@ class DeviceSpec:
     # adaptation loop (a busy or degraded device); tests use it to pin an
     # artificially slow fleet member
     tick_scale: float = 1.0
+    # physical location: devices sharing a site reach each other over the
+    # LAN link of the fleet's SiteTopology; cross-site hops pay WAN cost.
+    # Cross-device placement prefers idle same-site helpers.
+    site: str = DEFAULT_SITE
+    # how far the analytic accuracy proxy overshoots the *crowd-labeled*
+    # task accuracy on this unit (ground truth for the accuracy telemetry
+    # channel; the proxy never sees it directly)
+    latent_accuracy_bias: float = 0.0
 
     @property
     def wall_powered(self) -> bool:
@@ -204,11 +216,12 @@ class DeviceSpec:
         return self.platform
 
 
-def make_device(platform: str, index: int, seed: int = 0) -> DeviceSpec:
-    """Instantiate device ``index`` of a platform.  The per-unit jitter is
-    small (±5%) relative to the platform's systematic bias, so same-tier
-    calibration transfers while still leaving a residual only per-device
-    measurements could remove."""
+def make_device(platform: str, index: int, seed: int = 0,
+                site: str = DEFAULT_SITE) -> DeviceSpec:
+    """Instantiate device ``index`` of a platform at ``site``.  The
+    per-unit jitter is small (±5%) relative to the platform's systematic
+    bias, so same-tier calibration transfers while still leaving a
+    residual only per-device measurements could remove."""
     p = PLATFORMS[platform]
     # zlib.crc32, not hash(): str hashing is salted per-process and would
     # break cross-run determinism of the fleet
@@ -216,6 +229,9 @@ def make_device(platform: str, index: int, seed: int = 0) -> DeviceSpec:
     rng = random.Random((phash & 0xFFFF) * 1009 + index * 97 + seed)
     jit_l = 1.0 + rng.uniform(-0.05, 0.05)
     jit_e = 1.0 + rng.uniform(-0.05, 0.05)
+    # proxy overshoot grows downmarket: heavy silicon runs closer to the
+    # reference task pipeline the proxy was anchored on
+    acc_base = {HEAVY: 0.015, MEDIUM: 0.03, LIGHT: 0.05}[p.tier]
     return DeviceSpec(
         device_id=f"{platform}#{index}",
         platform=platform, tier=p.tier, hw=p.hw, chips=p.chips,
@@ -223,16 +239,21 @@ def make_device(platform: str, index: int, seed: int = 0) -> DeviceSpec:
         dvfs_floor=p.dvfs_floor,
         latent_latency_factor=p.latency_bias * jit_l,
         latent_energy_factor=p.energy_bias * jit_e,
-        trace_seed=seed + index * 31 + (phash & 0xFF))
+        trace_seed=seed + index * 31 + (phash & 0xFF),
+        site=site,
+        latent_accuracy_bias=acc_base * (1.0 + rng.uniform(-0.3, 0.3)))
 
 
 def build_fleet(n: int, seed: int = 0,
-                tiers: Tuple[str, ...] = TIERS) -> List[DeviceSpec]:
+                tiers: Tuple[str, ...] = TIERS,
+                sites: Tuple[str, ...] = (DEFAULT_SITE,)) -> List[DeviceSpec]:
     """A heterogeneous fleet of ``n`` devices, round-robin over every
     platform in the requested tiers (so any n ≥ #platforms covers all of
     them, and smaller fleets still mix tiers).  The pool interleaves
     tiers — heavy[0], medium[0], light[0], heavy[1], … — so even a
-    3-device fleet spans all capability classes."""
+    3-device fleet spans all capability classes.  ``sites`` assigns each
+    device a location round-robin (default: everyone at one site, i.e.
+    every peer one LAN hop away)."""
     per_tier = [platforms_by_tier(t) for t in tiers]
     if not any(per_tier):
         raise ValueError(f"no platforms in tiers {tiers}")
@@ -247,7 +268,8 @@ def build_fleet(n: int, seed: int = 0,
         p = pool[i % len(pool)]
         idx = counts.get(p.platform, 0)
         counts[p.platform] = idx + 1
-        fleet.append(make_device(p.platform, idx, seed=seed))
+        fleet.append(make_device(p.platform, idx, seed=seed,
+                                 site=sites[i % len(sites)]))
     return fleet
 
 

@@ -61,6 +61,11 @@ class FleetReport:
     violations_second_half: int
     device_ticks: Dict[str, int] = field(default_factory=dict)
     clock_skew_s: float = 0.0
+    # cross-device placement (empty when the fleet runs without the
+    # placer): requester -> human-readable current placement, plus how
+    # many re-placement sweeps the controller ran
+    placements: Dict[str, str] = field(default_factory=dict)
+    placement_events: int = 0
 
     def render(self) -> str:
         hdr = (f"{'tier':8s} {'dev':>4s} {'ticks':>6s} {'t/dev':>9s} "
@@ -83,6 +88,10 @@ class FleetReport:
             f"2nd half {self.violations_second_half}) "
             f"energy={self.total_energy_j:.4g} J "
             f"clock_skew={self.clock_skew_s:.3g}s")
+        if self.placements:
+            lines.append(f"placements ({self.placement_events} sweeps):")
+            for rid in sorted(self.placements):
+                lines.append(f"  {self.placements[rid]}")
         return "\n".join(lines)
 
 
@@ -133,6 +142,10 @@ def fleet_report(ctl: FleetController) -> FleetReport:
                                      r.timestamp_s)
     skew = (max(last_wake.values()) - min(last_wake.values())
             if last_wake else 0.0)
+    placements = {}
+    if ctl.placer is not None:
+        placements = {rid: dec.describe()
+                      for rid, dec in ctl.placer.decisions.items()}
     return FleetReport(
         tiers=summaries,
         total_ticks=len(recs),
@@ -142,4 +155,6 @@ def fleet_report(ctl: FleetController) -> FleetReport:
         violations_second_half=ctl.violations()
         - ctl.violations(last_s=mid_ts),
         device_ticks=device_ticks,
-        clock_skew_s=skew)
+        clock_skew_s=skew,
+        placements=placements,
+        placement_events=ctl.placement_events)

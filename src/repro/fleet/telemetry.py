@@ -20,6 +20,14 @@ affine relationship.  Calibrator populations are keyed on
 ``(tier, channel)`` (and ``(device, channel)``), so a fleet mixing both
 kinds never cross-contaminates its fits.
 
+A third channel carries **crowd-labeled task accuracy**: devices report
+:class:`AccuracyRecord`\\ s per elastic variant, the store pools a
+drift-corrected per-``(tier, variant)`` estimate
+(:meth:`TelemetryStore.measured_accuracy_for_tier`), and the fleet
+controller feeds it back into every same-tier
+``ActionEvaluator.measured`` — closing the accuracy loop the same way
+the latency/energy loop closes.
+
 Arrival-order independence: under the event-driven fleet scheduler,
 devices tick at independent rates and their reports reach the store out
 of order (reporting latency jitters per device).  Every record carries a
@@ -32,16 +40,18 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.optimizer import DRIFT_ACCURACY_COST
 from repro.core.profiler import Calibration
 
 # measurement channels: what produced the observation
 SIMULATED = "simulated"     # latent-bias silicon simulation (analytic scale)
 ENGINE = "engine"           # real ServingEngine step wall-times
-CHANNELS = (SIMULATED, ENGINE)
+ACCURACY = "accuracy"       # crowd-labeled task accuracy per variant
+CHANNELS = (SIMULATED, ENGINE, ACCURACY)
 
 
 @dataclass(frozen=True)
@@ -65,6 +75,27 @@ class MeasurementRecord:
     observed_energy_j: float
     tokens: int = 0
     channel: str = SIMULATED
+    timestamp_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class AccuracyRecord:
+    """One crowd-labeled task-accuracy observation.
+
+    ``variant`` identifies the elastic variant the accuracy was measured
+    for (any hashable key — in practice a ``VariantSpec``);
+    ``predicted_accuracy`` is what the optimizer believed when it chose
+    the action, ``observed_accuracy`` what crowd labeling actually
+    measured under ``drift`` units of distribution shift.  Records merge
+    by ``timestamp_s`` exactly like latency records, so the accuracy
+    channel is arrival-order independent too."""
+    device_id: str
+    tier: str
+    tick: int
+    variant: Hashable
+    predicted_accuracy: float
+    observed_accuracy: float
+    drift: float = 0.0
     timestamp_s: float = 0.0
 
 
@@ -188,9 +219,17 @@ class TelemetryStore:
                  min_lsq_samples: int = 8):
         self._kw = dict(window=window, alpha=alpha,
                         min_lsq_samples=min_lsq_samples)
+        self._alpha = alpha
         self.records: List[MeasurementRecord] = []
+        self.accuracy_records: List[AccuracyRecord] = []
         self._by_tier: Dict[Tuple[str, str], EwmaLsqCalibrator] = {}
         self._by_device: Dict[Tuple[str, str], EwmaLsqCalibrator] = {}
+        # (tier, variant) -> timestamp-sorted (sort_key, drift-free obs),
+        # trimmed to the newest _acc_keep like the latency calibrators,
+        # with the EWMA memoized until the next insert
+        self._acc: Dict[Tuple[str, Hashable], List[Tuple[tuple, float]]] = {}
+        self._acc_keep = 4 * window
+        self._acc_cached: Dict[Tuple[str, Hashable], Optional[float]] = {}
 
     # ------------------------------------------------------------ intake --
     def record(self, rec: MeasurementRecord) -> None:
@@ -208,6 +247,63 @@ class TelemetryStore:
                                rec.observed_energy_j,
                                timestamp_s=rec.timestamp_s,
                                key=(rec.device_id, rec.tick))
+
+    def record_accuracy(self, rec: AccuracyRecord) -> None:
+        """Ingest one crowd-labeled accuracy observation.  The modeled
+        drift penalty (``DRIFT_ACCURACY_COST × drift``) is backed OUT of
+        the observation before pooling, so what accumulates per
+        ``(tier, variant)`` is the drift-free measured accuracy — the
+        quantity ``ActionEvaluator.measured`` expects (the evaluator
+        re-applies the drift term for whatever context it scores)."""
+        self.accuracy_records.append(rec)
+        driftfree = rec.observed_accuracy \
+            + DRIFT_ACCURACY_COST * rec.drift
+        key = (rec.tier, rec.variant)
+        sort_key = (rec.timestamp_s, rec.device_id, rec.tick)
+        entries = self._acc.setdefault(key, [])
+        bisect.insort(entries, (sort_key, driftfree))
+        if len(entries) > self._acc_keep:
+            del entries[0]          # drop the oldest-by-timestamp
+        self._acc_cached[key] = None
+
+    def measured_accuracy_for_tier(self, tier: str) -> Dict[Hashable,
+                                                            float]:
+        """Crowd-measured drift-free accuracy per variant for one tier —
+        an EWMA over the timestamp-sorted samples (arrival-order
+        independent, like the latency calibrators).  Feed the result
+        into ``ActionEvaluator.measured``."""
+        out: Dict[Hashable, float] = {}
+        for key, entries in self._acc.items():
+            t, variant = key
+            if t != tier or not entries:
+                continue
+            est = self._acc_cached.get(key)
+            if est is None:
+                for _, v in entries:
+                    est = v if est is None \
+                        else (1 - self._alpha) * est + self._alpha * v
+                self._acc_cached[key] = est
+            out[variant] = est
+        return out
+
+    def accuracy_mae(self, tier: Optional[str] = None,
+                     measured: Optional[Dict[Hashable, float]] = None
+                     ) -> float:
+        """Mean absolute error of accuracy predictions vs crowd labels.
+        With ``measured``, each record's prediction is replaced by the
+        crowd estimate for its variant (minus the modeled drift term at
+        the record's own drift) — before/after under one record set
+        isolates what the accuracy feedback loop bought."""
+        errs = []
+        for r in self.accuracy_records:
+            if tier is not None and r.tier != tier:
+                continue
+            pred = r.predicted_accuracy
+            if measured is not None and r.variant in measured:
+                pred = max(0.0, measured[r.variant]
+                           - DRIFT_ACCURACY_COST * r.drift)
+            errs.append(abs(pred - r.observed_accuracy))
+        return float(np.mean(errs)) if errs else float("nan")
 
     # ----------------------------------------------------------- lookup ---
     def calibration_for_tier(self, tier: str,

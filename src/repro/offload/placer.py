@@ -23,6 +23,16 @@ import numpy as np
 
 from .partition import PrePartition, Unit
 
+#: Sentinel ``link_bw`` for the LAST device in a chain: there is no next
+#: device, so no egress link exists.  The placement DP never reads the
+#: last device's ``link_bw`` (transfers are charged on the *previous*
+#: device's link), so any value would work — this constant makes the
+#: "terminal device" intent explicit instead of a bare ``0``.  Fleet
+#: placement synthesizes real per-hop bandwidths from
+#: :class:`repro.fleet.placement.SiteTopology` and uses this only for
+#: the chain tail.
+NO_NEXT_LINK: float = 0.0
+
 
 @dataclass(frozen=True)
 class DeviceProfile:
@@ -30,7 +40,9 @@ class DeviceProfile:
     flops: float            # achievable FLOP/s
     mem_bytes: float        # memory available for params + activations
     mem_bw: float           # bytes/s
-    link_bw: float          # bytes/s to the NEXT device in the chain
+    # bytes/s to the NEXT device in the chain; NO_NEXT_LINK marks the
+    # terminal device (no egress — never consulted by the DP)
+    link_bw: float = NO_NEXT_LINK
     power_w: float = 5.0
     kind: str = "edge"      # edge | hub | tpu_slice
 
@@ -48,18 +60,18 @@ class DeviceProfile:
 DEVICE_POOLS: Dict[str, Tuple[DeviceProfile, ...]] = {
     "edge_pair": (
         DeviceProfile("rpi4b-class", 12e9, 2e9, 4e9, 10e6 / 8 * 1e3),  # ~1Gbps
-        DeviceProfile("jetson-class", 470e9, 6e9, 25e9, 0),
+        DeviceProfile("jetson-class", 470e9, 6e9, 25e9, NO_NEXT_LINK),
     ),
     "edge_trio": (
         DeviceProfile("watch-class", 4e9, 0.8e9, 2e9, 100e6),
         DeviceProfile("phone-class", 80e9, 4e9, 15e9, 200e6),
-        DeviceProfile("hub-class", 470e9, 8e9, 25e9, 0),
+        DeviceProfile("hub-class", 470e9, 8e9, 25e9, NO_NEXT_LINK),
     ),
     "pod_pipeline": (
         DeviceProfile("pod0-slice", 256 * 197e12, 256 * 16e9, 256 * 819e9,
                       50e9, kind="tpu_slice"),
         DeviceProfile("pod1-slice", 256 * 197e12, 256 * 16e9, 256 * 819e9,
-                      0, kind="tpu_slice"),
+                      NO_NEXT_LINK, kind="tpu_slice"),
     ),
 }
 

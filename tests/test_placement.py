@@ -1,0 +1,405 @@
+"""Fleet-aware cross-device placement: topology links, live profile
+synthesis, FleetPlacer search/hysteresis/migration, controller
+re-placement clock events, failure modes, and the telemetry accuracy
+channel feeding ``ActionEvaluator.measured``."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.monitor import ResourceContext, constant_trace
+from repro.core.optimizer import DRIFT_ACCURACY_COST
+from repro.elastic.operators import FULL_SPEC
+from repro.fleet import (LIGHT, AccuracyRecord, FleetController,
+                         FleetPlacer, LinkSpec, SiteTopology,
+                         TelemetryStore, build_fleet, make_device)
+from repro.fleet.placement import (FALLBACK, INFEASIBLE, PLACED,
+                                   MemberState, synthesize_profile)
+from repro.models.configs import InputShape
+from repro.offload import DEVICE_POOLS, NO_NEXT_LINK, place_dp
+
+CFG = get_config("paper-backbone")
+SHAPE = InputShape("fleet_t", 256, 4, "prefill")
+LOADED = ResourceContext(cpu_temp_derate=0.45, competing_procs=4,
+                         battery_frac=0.8, mem_free_frac=0.7)
+
+
+def _trio():
+    """Loaded phone + idle same-site jetson + idle cross-site server."""
+    phone = make_device("pixel_6_cpu", 0, site="home")
+    jetson = make_device("jetson_agx_orin", 0, site="home")
+    far = make_device("edge_server_a100", 0, site="dc")
+    return phone, jetson, far
+
+
+def _placer(*specs, **kw):
+    placer = FleetPlacer(CFG, **kw)
+    for s in specs:
+        placer.register(s)
+    return placer
+
+
+# ---------------------------------------------------------------- topology --
+def test_topology_lan_wan_and_overrides():
+    a = make_device("pixel_6_cpu", 0, site="home")
+    b = make_device("jetson_agx_orin", 0, site="home")
+    c = make_device("edge_server_a100", 0, site="dc")
+    topo = SiteTopology()
+    assert topo.same_site(a, b) and not topo.same_site(a, c)
+    assert topo.link_between(a, b) is topo.lan
+    assert topo.link_between(a, c) is topo.wan
+    fat = LinkSpec(bandwidth_bytes_s=1e9, rtt_s=1e-3, kind="fiber")
+    topo2 = SiteTopology(overrides={("dc", "home"): fat})
+    assert topo2.link_between(a, c) is fat
+    assert topo2.link_between(c, a) is fat        # unordered pair
+
+
+def test_link_effective_bw_folds_rtt():
+    link = LinkSpec(bandwidth_bytes_s=1e8, rtt_s=0.02)
+    # tiny tensors are RTT-dominated: effective bw collapses
+    assert link.effective_bw(1e3) < 1e5
+    # huge tensors approach the wire rate
+    assert link.effective_bw(1e9) == pytest.approx(1e8, rel=0.01)
+    assert link.transfer_s(1e8) == pytest.approx(1.02)
+
+
+def test_build_fleet_assigns_sites_round_robin():
+    fleet = build_fleet(6, seed=0, sites=("a", "b"))
+    assert [d.site for d in fleet] == ["a", "b", "a", "b", "a", "b"]
+    # default: legacy single-site fleet
+    assert {d.site for d in build_fleet(4, seed=0)} == {"site0"}
+
+
+def test_no_next_link_sentinel_terminates_static_pools():
+    for pool in DEVICE_POOLS.values():
+        assert pool[-1].link_bw == NO_NEXT_LINK
+
+
+# ------------------------------------------------------------ live profiles --
+def test_profile_derates_with_calibration_and_context():
+    from repro.core.profiler import Calibration
+    spec = make_device("jetson_agx_orin", 0)
+    idle = MemberState(spec=spec)
+    base = synthesize_profile(idle)
+    assert base.name == spec.device_id
+    cal = Calibration(latency_scale=2.0, samples=16)
+    slowed = synthesize_profile(MemberState(spec=spec, calibration=cal))
+    assert slowed.flops == pytest.approx(base.flops / 2.0)
+    throttled = synthesize_profile(MemberState(
+        spec=spec, ctx=ResourceContext(cpu_temp_derate=0.5)))
+    assert throttled.flops == pytest.approx(base.flops / 2.0)
+    squeezed = synthesize_profile(MemberState(
+        spec=spec, ctx=ResourceContext(mem_free_frac=0.5)))
+    assert squeezed.mem_bytes == pytest.approx(base.mem_bytes / 2.0)
+
+
+def test_multi_tenant_host_looks_slower_to_third_requester():
+    """A jetson already helping two phones must advertise less capacity
+    to the next one."""
+    phone, jetson, _ = _trio()
+    p2 = make_device("pixel_6_cpu", 1, site="home")
+    p3 = make_device("pixel_6_cpu", 2, site="home")
+    placer = _placer(phone, jetson, p2, p3)
+    for p in (phone, p2, p3):
+        placer.update_member(p.device_id, ctx=LOADED)
+    d1 = placer.place(phone.device_id)
+    d2 = placer.place(p2.device_id)
+    d3 = placer.place(p3.device_id)
+    assert d1.reason == PLACED and d1.hosts[1] == jetson.device_id
+    assert placer.member(jetson.device_id).tenant_load() > 0
+    # each successive tenant sees a busier host → worse predicted latency
+    assert d2.latency_s > d1.latency_s
+    assert d3.latency_s > d2.latency_s
+
+
+# ------------------------------------------------- placer: the acceptance ---
+def test_fleet_placement_beats_local_and_static_pool():
+    """The ISSUE's headline: a loaded phone with an idle same-site
+    helper must beat both local-only execution and the static
+    ``edge_pair`` pool on predicted end-to-end latency."""
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    dec = placer.place(phone.device_id)
+    assert dec.reason == PLACED
+    # same-site jetson, not the faster-but-WAN-remote server
+    assert dec.hosts == (phone.device_id, jetson.device_id)
+    local = placer.local_decision(phone.device_id)
+    static = place_dp(placer.pp, DEVICE_POOLS["edge_pair"])
+    assert dec.latency_s < 0.5 * local.latency_s
+    assert dec.latency_s < static.latency_s
+
+
+def test_same_site_helpers_rank_before_cross_site():
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    cands = placer.candidate_helpers(phone.device_id)
+    assert cands[0] == jetson.device_id      # LAN before WAN, despite
+    assert far.device_id in cands            # the a100's raw capability
+
+
+def test_migration_cost_charged_on_new_hosts_only():
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    first = placer.place(phone.device_id)
+    assert first.migration_s > 0             # params must ship to jetson
+    again = placer.place(phone.device_id)
+    # same hosts, same cuts → nothing moves
+    assert again.hosts == first.hosts
+    assert again.migration_s == 0.0 or again.reason == "hold"
+
+
+# ------------------------------------------------------------ failure modes --
+def test_helper_disappears_mid_run_falls_back_to_local():
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    dec = placer.place(phone.device_id)
+    assert dec.offloaded
+    affected = placer.remove_member(jetson.device_id)
+    assert affected == [phone.device_id]
+    cur = placer.current(phone.device_id)
+    assert cur.hosts == (phone.device_id,) and cur.reason == FALLBACK
+    # the evaluator-facing resolver drops the dead peer instead of
+    # crashing the optimizer
+    profs = placer.resolve_profiles(dec.hosts)
+    assert [p.name for p in profs] == [phone.device_id]
+    # next sweep re-places onto whatever is left (the WAN server or
+    # local) without raising
+    nxt = placer.place(phone.device_id)
+    assert jetson.device_id not in nxt.hosts
+
+
+def test_controller_drop_device_falls_back_and_keeps_running():
+    phone, jetson, far = _trio()
+
+    def tf(spec, n):
+        return constant_trace(
+            LOADED if spec.device_id == phone.device_id
+            else ResourceContext(), n)
+
+    ctl = FleetController([phone, jetson, far], CFG, SHAPE,
+                          trace_ticks=400, trace_factory=tf,
+                          placement=True, allow_offload=False,
+                          warmup_ticks=4, recalibrate_every=2)
+    ctl.set_sla(phone.device_id, 0.5)
+    ctl.run_for(6.0)
+    assert ctl.placement_of(phone.device_id).offloaded
+    t_drop = ctl.now_s
+    affected = ctl.drop_device(jetson.device_id)
+    assert affected == [phone.device_id]
+    assert ctl.placement_of(phone.device_id).hosts == (phone.device_id,)
+    before = len(ctl.records)
+    ctl.run_for(6.0)                        # keeps running, no crash
+    assert len(ctl.records) > before
+    post = [r for r in ctl.records if r.device_id == phone.device_id
+            and r.timestamp_s > t_drop]
+    assert post, "phone stopped waking after the helper died"
+    # the dead helper never reappears in a post-drop decision
+    for r in post:
+        assert jetson.device_id not in r.decision.action.offload.peers
+
+
+def test_departed_requester_releases_its_helpers():
+    """A requester that leaves the fleet must stop counting against its
+    helpers' capacity — dead tenants would permanently derate them."""
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    assert placer.place(phone.device_id).offloaded
+    assert placer.member(jetson.device_id).tenant_load() > 0
+    placer.remove_member(phone.device_id)
+    assert placer.member(jetson.device_id).tenant_load() == 0
+
+
+def test_lockstep_drop_device_stops_ticking():
+    """A dropped member must stop waking under lockstep too — a dead
+    device emitting telemetry would contaminate its tier's fit."""
+    phone, jetson, far = _trio()
+    ctl = FleetController([phone, jetson, far], CFG, SHAPE,
+                          trace_ticks=16, placement=True,
+                          allow_offload=False, warmup_ticks=2,
+                          recalibrate_every=2, step_mode="lockstep")
+    ctl.run(4)
+    ctl.drop_device(jetson.device_id)
+    n = sum(1 for r in ctl.records if r.device_id == jetson.device_id)
+    ctl.run(4)
+    assert sum(1 for r in ctl.records
+               if r.device_id == jetson.device_id) == n
+
+
+def test_memory_infeasible_fleet_subset_never_raises():
+    phone, jetson, far = _trio()
+    placer = _placer(phone, jetson, far)
+    starving = ResourceContext(mem_free_frac=1e-9)
+    for s in (phone, jetson, far):
+        placer.update_member(s.device_id, ctx=starving)
+    dec = placer.place(phone.device_id)
+    assert dec.reason == INFEASIBLE
+    assert math.isinf(dec.latency_s) and dec.placement is None
+
+
+def test_hysteresis_prevents_ping_pong_between_near_equal_helpers():
+    """Two near-identical helpers: tiny alternating load nudges must
+    never flip the placement back and forth."""
+    phone = make_device("pixel_6_cpu", 0, site="home")
+    j0 = make_device("jetson_agx_orin", 0, site="home")
+    j1 = make_device("jetson_agx_orin", 1, site="home")
+    placer = _placer(phone, j0, j1, hysteresis=0.15)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    first = placer.place(phone.device_id)
+    assert first.offloaded
+    chosen = first.hosts[1]
+    other = j1.device_id if chosen == j0.device_id else j0.device_id
+    hosts_seen = {first.hosts}
+    for i in range(6):
+        # nudge the *chosen* helper slightly busier than the other —
+        # a sub-hysteresis difference that would flip a greedy placer
+        placer.update_member(chosen, own_load=0.04 if i % 2 == 0 else 0.0)
+        placer.update_member(other, own_load=0.0 if i % 2 == 0 else 0.04)
+        dec = placer.place(phone.device_id)
+        hosts_seen.add(dec.hosts)
+    assert hosts_seen == {first.hosts}, \
+        f"placement ping-ponged: {hosts_seen}"
+
+
+def test_large_load_shift_does_replace():
+    """Hysteresis must not freeze the placement forever: a big genuine
+    slowdown of the chosen helper moves the work."""
+    phone = make_device("pixel_6_cpu", 0, site="home")
+    j0 = make_device("jetson_agx_orin", 0, site="home")
+    j1 = make_device("jetson_agx_orin", 1, site="home")
+    placer = _placer(phone, j0, j1)
+    placer.update_member(phone.device_id, ctx=LOADED)
+    first = placer.place(phone.device_id)
+    chosen = first.hosts[1]
+    placer.update_member(chosen, own_load=0.9)
+    dec = placer.place(phone.device_id)
+    assert dec.hosts != first.hosts
+    assert chosen not in dec.hosts
+
+
+# -------------------------------------------- controller re-placement event --
+@pytest.fixture(scope="module")
+def placed_run():
+    phone = make_device("pixel_6_cpu", 0, site="home")
+    j0 = make_device("jetson_agx_orin", 0, site="home")
+    j1 = make_device("jetson_agx_orin", 1, site="home")
+
+    def tf(spec, n):
+        return constant_trace(
+            LOADED if spec.device_id == phone.device_id
+            else ResourceContext(), n)
+
+    ctl = FleetController([phone, j0, j1], CFG, SHAPE, trace_ticks=400,
+                          trace_factory=tf, placement=True,
+                          allow_offload=False, warmup_ticks=4,
+                          recalibrate_every=2)
+    ctl.set_sla(phone.device_id, 0.5)
+    ctl.run_for(8.0)
+    return ctl, phone, j0, j1
+
+
+def test_loaded_phone_offloads_and_latency_collapses(placed_run):
+    ctl, phone, _, _ = placed_run
+    dec = ctl.placement_of(phone.device_id)
+    assert dec.offloaded and len(dec.hosts) == 2
+    recs = [r for r in ctl.records if r.device_id == phone.device_id]
+    assert recs[-1].decision.action.offload.enabled
+    assert recs[-1].decision.action.offload.peers == dec.hosts
+    # end-to-end observed latency collapses vs the first (local) wake
+    assert recs[-1].observed_s < 0.05 * recs[0].observed_s
+
+
+def test_replacement_is_a_clock_event_with_bounded_reaction(placed_run):
+    """After a simulated helper slowdown the controller must re-place
+    within a bounded number of clock events (device wakes)."""
+    ctl, phone, j0, j1 = placed_run
+    before = ctl.placement_of(phone.device_id)
+    chosen = before.hosts[1]
+    w0 = ctl.wakes
+    ctl.inject_load(chosen, 0.9)            # helper's owner starts a game
+    ctl.run_for(4.0)
+    after = ctl.placement_of(phone.device_id)
+    assert after.hosts != before.hosts
+    assert chosen not in after.hosts
+    moves = [(ts, w) for ts, w, d in ctl.placement_log
+             if d.requester == phone.device_id and w >= w0]
+    assert moves, "no re-placement logged after the slowdown"
+    reaction_events = moves[0][1] - w0
+    # bounded: the pulled-forward placement wake fires before the fleet
+    # completes two full rounds of device wakes
+    assert reaction_events <= 2 * len(ctl.devices)
+
+
+def test_placement_report_surfaces_decisions(placed_run):
+    from repro.fleet import fleet_report
+    ctl, phone, _, _ = placed_run
+    rep = fleet_report(ctl)
+    assert rep.placement_events > 0
+    assert phone.device_id in rep.placements
+    assert "->" in rep.placements[phone.device_id]
+    assert phone.device_id in rep.render()
+
+
+def test_lockstep_mode_places_on_recalibration_cadence():
+    phone, jetson, far = _trio()
+
+    def tf(spec, n):
+        return constant_trace(
+            LOADED if spec.device_id == phone.device_id
+            else ResourceContext(), n)
+
+    ctl = FleetController([phone, jetson, far], CFG, SHAPE,
+                          trace_ticks=16, trace_factory=tf,
+                          placement=True, allow_offload=False,
+                          warmup_ticks=4, recalibrate_every=2,
+                          step_mode="lockstep")
+    ctl.set_sla(phone.device_id, 0.5)
+    ctl.run(12)
+    assert ctl.placement_events > 0
+    assert ctl.placement_of(phone.device_id).offloaded
+
+
+# ------------------------------------------------- accuracy channel ---------
+def test_store_accuracy_channel_backs_out_modeled_drift():
+    store = TelemetryStore()
+    truth = 0.70                     # drift-free crowd accuracy
+    for i in range(24):
+        drift = 0.5 * (i % 3) / 2.0
+        store.record_accuracy(AccuracyRecord(
+            device_id="d0", tier=LIGHT, tick=i, variant="v",
+            predicted_accuracy=0.76,
+            observed_accuracy=truth - DRIFT_ACCURACY_COST * drift,
+            drift=drift, timestamp_s=float(i)))
+    est = store.measured_accuracy_for_tier(LIGHT)
+    assert est["v"] == pytest.approx(truth, abs=1e-6)
+    # MAE with the crowd estimate beats the raw proxy's
+    before = store.accuracy_mae(tier=LIGHT)
+    after = store.accuracy_mae(tier=LIGHT, measured=est)
+    assert after < 0.01 < before
+
+
+def test_crowd_measured_accuracy_reduces_drift_regression():
+    """The drift regression test of the ROADMAP item: predictions made
+    with the crowd-fed ``measured`` dict track observed accuracy far
+    better than the raw proxy did, and the evaluator actually consumes
+    the feedback."""
+    fleet = build_fleet(6, seed=0)
+    drifty = ResourceContext(data_drift=0.6, battery_frac=0.9)
+    ctl = FleetController(
+        fleet, CFG, SHAPE, trace_ticks=16, warmup_ticks=4,
+        recalibrate_every=2,
+        trace_factory=lambda spec, n: constant_trace(drifty, n))
+    ctl.run(16)
+    assert ctl.telemetry.accuracy_records
+    ev = ctl.loop_for(fleet[0].device_id).evaluator
+    assert ev.measured, "accuracy feedback never reached the evaluator"
+    # the crowd estimate sits below the optimistic proxy (latent bias)
+    assert ev.measured[FULL_SPEC] < ev.proxy_accuracy(FULL_SPEC)
+    for tier in {d.tier for d in fleet}:
+        est = ctl.telemetry.measured_accuracy_for_tier(tier)
+        before = ctl.telemetry.accuracy_mae(tier=tier)
+        after = ctl.telemetry.accuracy_mae(tier=tier, measured=est)
+        assert after < before
