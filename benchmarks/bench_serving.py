@@ -1,11 +1,15 @@
-"""Serving hot path: per-slot-loop vs slot-batched decode.
+"""Serving hot path: per-slot-loop vs slot-batched decode + admission.
 
 Measures steady-state decode throughput (tokens/sec) and per-step
 latency (p50/p99) of the ServingEngine in both decode modes at several
 slot counts, verifies the two modes produce bit-identical greedy token
-streams, and checks that a second engine sharing a warm CompileCache
-compiles nothing.  Results go to stdout (the ``name,us_per_call,derived``
-CSV contract) and to ``BENCH_serving.json`` for trend tracking.
+streams, checks that a second engine sharing a warm CompileCache
+compiles nothing, and runs an admission-burst scenario (N same-bucket
+requests arrive at once) comparing batched-prefill admission — ONE jit
+call for the whole burst — against the sequential per-request reference
+on prefill calls per request and p95 time-to-first-token.  Results go to
+stdout (the ``name,us_per_call,derived`` CSV contract) and to
+``BENCH_serving.json`` for trend tracking.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--json PATH]
 """
@@ -74,6 +78,43 @@ def max_new_tokens_for(steps: int) -> int:
     return steps + 8
 
 
+BURST_N = 8
+
+
+def _admission_burst(params, cc: CompileCache, n: int = BURST_N):
+    """N same-bucket requests arrive at once; compare batched-prefill
+    admission (one jit call) against the sequential per-request reference.
+    Programs are pre-warmed on a throwaway engine so compile time doesn't
+    pollute time-to-first-token; the measured engine must find everything
+    in the warm cache (``recompiles == 0``)."""
+    out = {"n": n}
+    for prefill_mode in ("per_request", "batched"):
+        reqs = []
+        for _ in range(2):           # first pass warms, second measures
+            eng = ServingEngine(CFG, params, slots=n, max_seq=256,
+                                prefill_mode=prefill_mode, compile_cache=cc)
+            rng = np.random.default_rng(7)
+            reqs = [Request(rid=i,
+                            prompt=rng.integers(0, CFG.vocab_size, size=24)
+                            .astype(np.int32), max_new_tokens=4)
+                    for i in range(n)]
+            for r in reqs:
+                eng.submit(r)
+            eng.step()               # the admission burst + first decode
+            eng.drain()
+        ttft = sorted(r.first_token_s - r.arrived_s for r in reqs)
+        out[prefill_mode] = {
+            "prefill_calls": eng.stats.prefill_calls,
+            "prefills": eng.stats.prefills,
+            "prefill_calls_per_request": eng.stats.prefill_calls / n,
+            "p95_ttft_ms": ttft[min(n - 1, int(0.95 * n))] * 1e3,
+            "recompiles": eng.stats.recompiles,
+        }
+    out["p95_ttft_speedup"] = (out["per_request"]["p95_ttft_ms"]
+                               / max(out["batched"]["p95_ttft_ms"], 1e-9))
+    return out
+
+
 def _token_streams(params, mode: str, slots: int, cc: CompileCache):
     eng = ServingEngine(CFG, params, slots=slots, max_seq=256,
                         decode_mode=mode, compile_cache=cc)
@@ -134,15 +175,32 @@ def run(quick: bool = False, json_path: str = "BENCH_serving.json") -> None:
     emit("serving.compile_cache", 0.0,
          f"first={e1.stats.recompiles};second={e2.stats.recompiles}")
 
+    # admission burst: N same-bucket requests at once — batched prefill
+    # admission (1 jit call) vs sequential per-request (N calls)
+    burst = _admission_burst(params, cc)
+    results["admission_burst"] = burst
+    for m in ("per_request", "batched"):
+        emit(f"serving.admit.{m}", burst[m]["p95_ttft_ms"] * 1e3,
+             f"prefill_calls={burst[m]['prefill_calls']};"
+             f"recompiles={burst[m]['recompiles']}")
+    emit("serving.admit.p95_ttft_speedup", 0.0,
+         f"x{burst['p95_ttft_speedup']:.2f}")
+
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {json_path}")
 
     if quick:
         # CI smoke: fail loudly if the batched path regressed on
-        # correctness or program sharing (throughput is machine-dependent)
+        # correctness, program sharing or burst admission (throughput and
+        # TTFT magnitudes are machine-dependent, so only the structural
+        # properties are asserted)
         assert identical, "batched decode diverged from reference"
         assert e2.stats.recompiles == 0, "compile cache sharing broken"
+        assert burst["batched"]["prefill_calls"] == 1, \
+            "burst admission split into multiple prefill calls"
+        assert burst["batched"]["recompiles"] == 0, \
+            "warm burst admission recompiled"
 
 
 if __name__ == "__main__":

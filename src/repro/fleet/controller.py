@@ -256,22 +256,27 @@ class FleetController:
 
     def build_engine(self, device_id: str, params, *, cfg=None, slots: int = 4,
                      max_seq: int = 256, opts=None, steps_per_tick: int = 4,
-                     decode_mode: str = "batched"):
+                     decode_mode: str = "batched",
+                     prefill_mode: str = "batched", sampling=None):
         """Construct and attach a ServingEngine for a device, wired to the
         fleet's shared compile cache under the device's compile domain —
         same-platform fleet members reuse each other's jitted decode and
         prefill programs instead of compiling ~identical ones per device.
+        ``sampling`` sets the engine's default :class:`SamplingOpts`;
+        per-slot sampling state is runtime data, so heterogeneous sampling
+        across the fleet still shares every compiled program.
 
         ``cfg`` defaults to the fleet's model config; demos and tests pass
         a reduced variant so real decode steps stay cheap."""
         from repro.models.runtime import DEFAULT_OPTIONS
-        from repro.serving import ServingEngine
+        from repro.serving import DEFAULT_SAMPLING, ServingEngine
         spec = self._devices[device_id].spec
         engine = ServingEngine(
             cfg if cfg is not None else self.cfg, params,
             slots=slots, max_seq=max_seq,
             opts=opts if opts is not None else DEFAULT_OPTIONS,
-            decode_mode=decode_mode,
+            decode_mode=decode_mode, prefill_mode=prefill_mode,
+            sampling=sampling if sampling is not None else DEFAULT_SAMPLING,
             compile_cache=self.compile_cache,
             compile_domain=spec.compile_domain)
         self.attach_engine(device_id, engine, steps_per_tick)

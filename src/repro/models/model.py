@@ -26,7 +26,8 @@ Cache = Dict[str, Any]
 
 __all__ = ["init_params", "forward", "lm_loss", "init_cache", "prefill",
            "decode_step", "Cache", "init_slot_cache", "write_cache_slot",
-           "greedy_batched_step"]
+           "greedy_batched_step", "sample_logits", "sample_step",
+           "sample_batched_step", "admit_slot", "batched_prefill_admit"]
 
 
 def _n_attn_layers(cfg: ModelConfig) -> int:
@@ -77,19 +78,48 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 def init_slot_cache(cfg: ModelConfig, slots: int, max_seq: int,
                     opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
     """A zeroed slot-stacked cache: ``init_cache(cfg, 1, ...)`` leaves with
-    a leading ``(slots,)`` axis."""
+    a leading ``(slots,)`` axis, plus a ``"sample"`` subtree holding each
+    slot's sampling state (PRNG key, temperature, top-k) — per-slot policy
+    rides in the cache pytree so it is donated, vmapped and slot-scattered
+    exactly like the model state.  The zero init is greedy (temperature
+    0), so a cache never touched by admission argmaxes."""
     one = init_cache(cfg, 1, max_seq, opts)
-    return jax.tree_util.tree_map(
+    stacked = jax.tree_util.tree_map(
         lambda a: jnp.zeros((slots,) + a.shape, a.dtype), one)
+    stacked["sample"] = {"key": jnp.zeros((slots, 2), jnp.uint32),
+                         "temp": jnp.zeros((slots,), jnp.float32),
+                         "top_k": jnp.zeros((slots,), jnp.int32)}
+    return stacked
 
 
 def write_cache_slot(stacked: Cache, cache: Cache, slot: jax.Array) -> Cache:
     """Write a batch=1 cache (e.g. a fresh prefill) into slot ``slot`` of a
     slot-stacked cache.  ``slot`` may be traced, so one compiled program
-    serves every slot index."""
+    serves every slot index.  The two trees must match leaf-for-leaf —
+    for an engine cache carrying a ``"sample"`` subtree use
+    :func:`admit_slot`, which also sets the slot's sampling state."""
     return jax.tree_util.tree_map(
         lambda s, c: jax.lax.dynamic_update_index_in_dim(
             s, c.astype(s.dtype), slot, 0), stacked, cache)
+
+
+def admit_slot(stacked: Cache, cache: Cache, slot: jax.Array,
+               key: jax.Array, temp: jax.Array, top_k: jax.Array) -> Cache:
+    """Write a prefilled batch=1 *model* cache plus its slot sampling state
+    (``key (2,) uint32``, ``temp ()``, ``top_k ()``) into slot ``slot`` of
+    a slot-stacked serving cache.  ``slot`` is traced — one program covers
+    every slot index."""
+    model_side = {k: v for k, v in stacked.items() if k != "sample"}
+    out = write_cache_slot(model_side, cache, slot)
+    s = stacked["sample"]
+
+    def upd(arr, val):
+        return jax.lax.dynamic_update_index_in_dim(
+            arr, val.astype(arr.dtype), slot, 0)
+
+    out["sample"] = {"key": upd(s["key"], key), "temp": upd(s["temp"], temp),
+                     "top_k": upd(s["top_k"], top_k)}
+    return out
 
 
 def greedy_batched_step(params: Params, cfg: ModelConfig, cache: Cache,
@@ -111,6 +141,117 @@ def greedy_batched_step(params: Params, cfg: ModelConfig, cache: Cache,
 
     (nxt, pos), new_cache = jax.vmap(one)(cache, tokens)
     return nxt, pos, new_cache
+
+
+# ================================================================ sampling ==
+def sample_logits(logits: jax.Array, key: jax.Array, temp: jax.Array,
+                  top_k: jax.Array, vocab: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Draw the next token from one sequence's (vocab-padded) logits row.
+
+    ``temp == 0`` reduces *exactly* to the greedy argmax the pre-sampling
+    engine computed (the sampled branch is selected away by ``where``);
+    ``top_k == 0`` samples the full vocabulary, ``top_k == 1`` keeps only
+    the argmax.  The key is split on every call, sampled or not, so a
+    stream depends only on the initial key and the emission index — never
+    on which other slots are decoding.  Returns ``(token, advanced key)``.
+    """
+    lg = logits[:vocab]
+    greedy = jnp.argmax(lg).astype(jnp.int32)
+    key, sub = jax.random.split(key)
+    scaled = lg.astype(jnp.float32) / jnp.maximum(
+        temp.astype(jnp.float32), 1e-6)
+    # top-k by stable descending rank (ties keep the lowest index, like
+    # argmax) so top_k==1 is *exactly* greedy even on tied logits;
+    # top_k<=0 keeps the whole vocabulary
+    order = jnp.argsort(-scaled)
+    ranks = jnp.zeros_like(order).at[order].set(jnp.arange(vocab))
+    masked = jnp.where((top_k > 0) & (ranks >= jnp.clip(top_k, 1, vocab)),
+                       jnp.finfo(jnp.float32).min, scaled)
+    sampled = jax.random.categorical(sub, masked).astype(jnp.int32)
+    return jnp.where(temp > 0, sampled, greedy), key
+
+
+def sample_step(params: Params, cfg: ModelConfig, cache: Cache,
+                token: jax.Array, opts: RuntimeOptions = DEFAULT_OPTIONS
+                ) -> Tuple[jax.Array, Cache]:
+    """One sampling decode step for a single sequence.
+
+    ``token`` is a ``()`` int32 scalar; ``cache`` is a batch=1 cache
+    carrying a ``"sample"`` subtree ``{key (2,) uint32, temp (), top_k
+    ()}`` (``decode_step`` threads unknown keys through untouched).
+    :func:`sample_batched_step` is exactly ``vmap`` of this function, so
+    per-request streams are bit-identical across the batched and per-slot
+    decode paths."""
+    logits, c2 = decode_step(params, cfg, cache, token[None], opts)
+    s = cache["sample"]
+    nxt, new_key = sample_logits(logits[0], s["key"], s["temp"],
+                                 s["top_k"], cfg.vocab_size)
+    c2["sample"] = {"key": new_key, "temp": s["temp"], "top_k": s["top_k"]}
+    return nxt, c2
+
+
+def sample_batched_step(params: Params, cfg: ModelConfig, cache: Cache,
+                        tokens: jax.Array,
+                        opts: RuntimeOptions = DEFAULT_OPTIONS):
+    """One sampling decode step over a slot-stacked cache.
+
+    The per-slot temperature/top-k/PRNG key live in the cache's
+    ``"sample"`` subtree, so heterogeneous per-slot policies run under ONE
+    compiled program — sampling parameters are runtime data, not compile
+    constants.  Slots with ``temp == 0`` produce exactly the greedy argmax
+    (the engine's historical behavior).  Returns ``(next_tokens (slots,),
+    positions (slots,), new cache)``."""
+    def one(c: Cache, tok: jax.Array):
+        nxt, c2 = sample_step(params, cfg, c, tok, opts)
+        return (nxt, c2["pos"]), c2
+
+    (nxt, pos), new_cache = jax.vmap(one)(cache, tokens)
+    return nxt, pos, new_cache
+
+
+# ===================================================== batched admission ====
+def batched_prefill_admit(params: Params, cfg: ModelConfig, stacked: Cache,
+                          tokens: jax.Array, slot_ids: jax.Array,
+                          keys: jax.Array, temps: jax.Array,
+                          top_ks: jax.Array, opts: RuntimeOptions,
+                          max_seq: int):
+    """Prefill ``k`` left-padded same-bucket prompts in ONE call and
+    scatter each row's cache, sampling state and first sampled token into
+    its decode slot of the slot-stacked serving cache.
+
+    ``tokens`` is ``(k, bucket)`` int32; ``slot_ids``/``keys``/``temps``/
+    ``top_ks`` are per-row.  Rows are written in order, so callers pad a
+    burst up to a k-bucket by *prepending* rows that target the first real
+    row's slot — the real row then overwrites the padding's garbage.
+    Returns ``((k,) first tokens, new stacked cache)``; each row's first
+    token is drawn by the same :func:`sample_logits` the decode step uses
+    (argmax when its temperature is 0)."""
+    k, bucket = tokens.shape
+    # the scratch cache is sized to the prompt *bucket*, not max_seq:
+    # burst admission's transient memory is k×bucket + one max_seq row
+    # (padded below, per row) instead of a second full k×max_seq cache —
+    # the zero padding is identical to what a max_seq prefill writes
+    cache = init_cache(cfg, k, min(bucket, max_seq), opts)
+    logits, cache = prefill(params, cfg, tokens, cache, opts)
+    first, new_keys = jax.vmap(
+        lambda lg, ky, t, tk: sample_logits(lg, ky, t, tk, cfg.vocab_size)
+    )(logits[:, -1], keys, temps, top_ks)
+    out = stacked
+    model_side = {key: v for key, v in stacked.items() if key != "sample"}
+    for i in range(k):
+        # batch lives at axis 1 of every array leaf; ``pos`` is a scalar
+        # shared by the whole bucket (all rows are left-padded to it)
+        row = jax.tree_util.tree_map(
+            lambda a, i=i: a if a.ndim == 0 else
+            jax.lax.slice_in_dim(a, i, i + 1, axis=1), cache)
+        row = jax.tree_util.tree_map(
+            lambda s, c: c if c.ndim == 0 else jnp.pad(
+                c, [(0, t - n) for t, n in zip(s.shape[1:], c.shape)]),
+            model_side, row)
+        out = admit_slot(out, row, slot_ids[i], new_keys[i], temps[i],
+                         top_ks[i])
+    return first, out
 
 
 # =========================================================== decode blocks ==

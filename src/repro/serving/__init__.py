@@ -1,18 +1,26 @@
 """Slot-batched continuous-batching serving layer.
 
 :class:`ServingEngine` packs asynchronous :class:`Request` objects into
-fixed decode slots and advances all of them in one jitted, cache-donated
-step per tick (``decode_mode="batched"``; the per-slot reference loop
-survives as ``decode_mode="per_slot"``).  :class:`CompileCache` shares
-jitted decode/prefill programs across engines keyed on ``(cfg, opts,
-slots, max_seq, compile_domain)`` — same-platform fleet members compile
-once — with :data:`GLOBAL_COMPILE_CACHE` as the process-wide default.
-:class:`ServeStats` counts steps/tokens/prefills/recompiles, and the
-engine's ``step_time_ewma_s`` / ``on_step`` hooks are the measured
-back-end feed the fleet's telemetry and event scheduler consume."""
+fixed decode slots, admits same-bucket bursts in ONE batched prefill
+call (``prefill_mode="batched"``; the sequential reference survives as
+``"per_request"``) and advances all slots in one jitted, cache-donated
+sampling step per tick (``decode_mode="batched"``; the per-slot
+reference loop survives as ``"per_slot"``).  Per-request
+:class:`SamplingOpts` (temperature / top-k / seed) become per-slot
+device state inside the stacked cache — temperature 0 is bit-identical
+to the historical greedy decode.  :class:`CompileCache` shares jitted
+decode/prefill programs across engines keyed on ``(cfg, opts, slots,
+max_seq, compile_domain)`` — same-platform fleet members compile once,
+and sampling never enters the key — with :data:`GLOBAL_COMPILE_CACHE` as
+the process-wide default.  :class:`ServeStats` counts steps/tokens/
+prefills/prefill-calls/sampled-tokens/recompiles, and the engine's
+``step_time_ewma_s`` / ``on_step`` hooks are the measured back-end feed
+the fleet's telemetry and event scheduler consume."""
 from .compile_cache import (CompileCache, GLOBAL_COMPILE_CACHE,
                             ServePrograms)
 from .engine import Request, ServeStats, ServingEngine
+from .sampling import DEFAULT_SAMPLING, SamplingOpts, request_key
 
 __all__ = ["CompileCache", "GLOBAL_COMPILE_CACHE", "ServePrograms",
-           "Request", "ServeStats", "ServingEngine"]
+           "Request", "ServeStats", "ServingEngine",
+           "SamplingOpts", "DEFAULT_SAMPLING", "request_key"]

@@ -8,6 +8,11 @@ that actually determine the compiled artifact — ``(cfg, opts, slots,
 max_seq, domain)`` — and hands the *same* jitted callables to every
 engine that asks, so same-platform fleet members compile once.
 
+Sampling is deliberately **absent** from the key: per-slot temperature,
+top-k and PRNG keys are runtime arrays inside the slot-stacked cache
+(see :mod:`repro.serving.sampling`), so engines with heterogeneous
+sampling policies still share every program.
+
 ``domain`` namespaces otherwise-identical keys by compile target
 (platform/ISA): in a real deployment a pixel_6 cannot reuse a jetson's
 binaries even for the same model, so the fleet controller passes each
@@ -15,16 +20,29 @@ device's :attr:`DeviceSpec.compile_domain` here.
 
 Program set per key:
 
-* ``decode``     — one batched greedy step over the slot-stacked cache
-                   (``greedy_batched_step`` under ``vmap``), with the
-                   cache **donated** so KV/SSM buffers are updated in
-                   place instead of copied every token
-* ``decode_ref`` — the batch=1 reference decode (the per-slot loop path,
-                   kept for equivalence tests and benchmarks)
-* ``write_slot`` — writes a fresh prefill into one slot of the stacked
-                   cache (stacked side donated; slot index traced, so one
-                   program covers every slot)
-* ``prefill(bucket)`` — per-prompt-bucket prefill jits, built lazily
+* ``decode``       — one batched sampling step over the slot-stacked
+                     cache (``sample_batched_step`` under ``vmap``), with
+                     the cache **donated** so KV/SSM buffers are updated
+                     in place instead of copied every token; slots whose
+                     temperature is 0 argmax exactly as before
+* ``decode_greedy`` — the pure-argmax batched step; the engine selects it
+                     on ticks where no active slot samples, so all-greedy
+                     workloads never pay the sampling machinery
+* ``decode_ref``   — the batch=1 reference decode returning raw logits
+                     (kept for equivalence tests and benchmarks)
+* ``sample_ref``   — the batch=1 sampling decode (the per-slot loop
+                     path); ``decode`` is precisely ``vmap`` of this
+* ``sample_first`` — draws a prefill's first token from its last-position
+                     logits row (per-request admission path)
+* ``admit_slot``   — writes a fresh prefill + its sampling state into one
+                     slot of the stacked cache (stacked side donated;
+                     slot index traced, so one program covers every slot)
+* ``prefill(bucket)`` — per-prompt-bucket batch=1 prefill jits, lazy
+* ``prefill_batch(bucket, k)`` — ONE-call burst admission: prefill a
+                     ``(k, bucket)`` stack of same-bucket prompts and
+                     scatter every row into its slot; keyed on the
+                     k-bucket so mixed burst sizes reuse a handful of
+                     programs instead of recompiling per shape
 """
 from __future__ import annotations
 
@@ -33,8 +51,10 @@ from typing import Callable, Dict, Tuple
 import jax
 
 from repro.models.configs import ModelConfig
-from repro.models.model import (decode_step, greedy_batched_step, prefill,
-                                write_cache_slot)
+from repro.models.model import (admit_slot, batched_prefill_admit,
+                                decode_step, greedy_batched_step, prefill,
+                                sample_batched_step, sample_logits,
+                                sample_step)
 from repro.models.runtime import RuntimeOptions
 
 Key = Tuple[ModelConfig, RuntimeOptions, int, int, str]
@@ -43,29 +63,57 @@ Key = Tuple[ModelConfig, RuntimeOptions, int, int, str]
 class ServePrograms:
     """The jitted callables for one (cfg, opts, slots, max_seq, domain)."""
 
-    def __init__(self, cfg: ModelConfig, opts: RuntimeOptions):
-        self._cfg, self._opts = cfg, opts
+    def __init__(self, cfg: ModelConfig, opts: RuntimeOptions,
+                 max_seq: int = 512):
+        self._cfg, self._opts, self._max_seq = cfg, opts, max_seq
         # donate the stacked cache: its buffers are rewritten every token,
         # so aliasing input→output storage avoids a full cache copy per step
         self.decode: Callable = jax.jit(
+            lambda p, c, t: sample_batched_step(p, cfg, c, t, opts),
+            donate_argnums=(1,))
+        # all-greedy ticks skip the sampling machinery entirely (the
+        # engine picks this program when no active slot has temp > 0;
+        # outputs are bit-identical to `decode` at temperature 0)
+        self.decode_greedy: Callable = jax.jit(
             lambda p, c, t: greedy_batched_step(p, cfg, c, t, opts),
             donate_argnums=(1,))
         self.decode_ref: Callable = jax.jit(
             lambda p, c, t: decode_step(p, cfg, c, t, opts))
-        self.write_slot: Callable = jax.jit(
-            lambda stacked, c, i: write_cache_slot(stacked, c, i),
+        self.sample_ref: Callable = jax.jit(
+            lambda p, c, t: sample_step(p, cfg, c, t, opts))
+        self.sample_first: Callable = jax.jit(
+            lambda lg, k, t, tk: sample_logits(lg, k, t, tk, cfg.vocab_size))
+        self.admit_slot: Callable = jax.jit(
+            lambda stacked, c, i, k, t, tk: admit_slot(stacked, c, i, k, t,
+                                                       tk),
             donate_argnums=(0,))
         self._prefills: Dict[int, Callable] = {}
+        self._prefill_batches: Dict[Tuple[int, int], Callable] = {}
 
     def prefill(self, bucket: int) -> Tuple[Callable, bool]:
-        """The prefill jit for one prompt bucket, plus whether this call
-        created it (a compile the caller should account for)."""
+        """The batch=1 prefill jit for one prompt bucket, plus whether this
+        call created it (a compile the caller should account for)."""
         fresh = bucket not in self._prefills
         if fresh:
             cfg, opts = self._cfg, self._opts
             self._prefills[bucket] = jax.jit(
                 lambda p, c, t: prefill(p, cfg, t, c, opts))
         return self._prefills[bucket], fresh
+
+    def prefill_batch(self, bucket: int, k: int) -> Tuple[Callable, bool]:
+        """The one-call burst-admission program for ``(prompt bucket,
+        k-bucket)``: prefill ``(k, bucket)`` stacked prompts and scatter
+        each row's cache + sampling state into its slot of the (donated)
+        slot-stacked cache.  Callers bucket ``k`` (powers of two capped at
+        the slot count) so mixed burst sizes share a handful of programs."""
+        fresh = (bucket, k) not in self._prefill_batches
+        if fresh:
+            cfg, opts, max_seq = self._cfg, self._opts, self._max_seq
+            self._prefill_batches[(bucket, k)] = jax.jit(
+                lambda p, st, t, s, ky, tp, tk: batched_prefill_admit(
+                    p, cfg, st, t, s, ky, tp, tk, opts, max_seq),
+                donate_argnums=(1,))
+        return self._prefill_batches[(bucket, k)], fresh
 
 
 class CompileCache:
@@ -86,7 +134,7 @@ class CompileCache:
             self.hits += 1
             return entry, False
         self.misses += 1
-        entry = ServePrograms(cfg, opts)
+        entry = ServePrograms(cfg, opts, max_seq)
         self._entries[key] = entry
         return entry, True
 

@@ -10,20 +10,37 @@ frequency" maps to a generation counter here).
 Two decode paths share the scheduler:
 
 * ``decode_mode="batched"`` (default) — ONE slot-stacked cache pytree of
-  shape ``(slots, ...)`` and one jitted decode step per tick.  Greedy
-  argmax happens on device; the tick does a single bulk device→host
-  transfer of ``(slots,)`` tokens + positions, and the stacked cache is
-  *donated* to the step so KV/SSM buffers update in place.  Inactive
-  slots are masked (their outputs ignored), never skipped — the decode
-  shape is constant, so one compiled program serves every occupancy.
+  shape ``(slots, ...)`` and one jitted decode step per tick.  Per-slot
+  sampling (temperature / top-k / PRNG key, living as leaves of the
+  stacked cache) happens on device; slots with temperature 0 argmax
+  exactly as the historical greedy engine did.  The tick does a single
+  bulk device→host transfer of ``(slots,)`` tokens + positions, and the
+  stacked cache is *donated* to the step so KV/SSM buffers update in
+  place.  Inactive slots are masked (their outputs ignored), never
+  skipped — the decode shape is constant, so one compiled program serves
+  every occupancy.
 * ``decode_mode="per_slot"`` — the original reference loop: one jit call
   and one host sync per active slot.  Kept for equivalence tests and as
   the benchmark baseline; token streams are bit-identical across modes.
 
+Admission is batched too (``prefill_mode="batched"``, the default on the
+batched decode path): ``_admit`` drains every waiting request that shares
+the head-of-line request's prompt bucket — the head is never skipped, so
+a stream of same-bucket arrivals cannot starve an earlier waiter from
+another bucket — and runs ONE ``(k, bucket)`` prefill jit call whose
+results are scattered straight into their slots on device.  Burst sizes
+are bucketed (powers of two capped at the slot count, short bursts padded
+with throwaway rows), so mixed burst sizes reuse a handful of programs.
+``prefill_mode="per_request"`` keeps the sequential reference admission
+(one prefill jit per request), which the property suite pins the batched
+path against.
+
 Compiled programs come from a :class:`CompileCache` shared across engines
 (process-global by default), so a fleet of same-platform engines compiles
 each program once — ``ServeStats.recompiles`` counts only the programs
-*this* engine's requests actually caused to be built.
+*this* engine's requests actually caused to be built.  Sampling options
+never enter the cache key (they are runtime arrays), so engines with
+heterogeneous per-slot policies still share every program.
 """
 from __future__ import annotations
 
@@ -43,22 +60,31 @@ from repro.models.model import init_cache, init_slot_cache
 from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
 
 from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, ServePrograms
+from .sampling import DEFAULT_SAMPLING, SamplingOpts, request_key
+
+PREFILL_MODES = ("batched", "per_request")
 
 
 @dataclass
 class Request:
     """One generation request in the serving queue.  ``rid`` is the
-    caller's identifier (echoed back, never interpreted); ``prompt`` is
+    caller's identifier (echoed back, never interpreted — but folded into
+    the request's PRNG key, so reuse rids deliberately); ``prompt`` is
     the int32 token array to prefill; ``max_new_tokens`` bounds the
     generated continuation (the prefill's first sampled token counts
-    toward it).  The engine fills the remaining fields: ``generated``
-    accumulates sampled tokens, ``done`` flips when the budget or
-    ``max_seq`` is reached, and the ``*_s`` stamps record queue/latency
-    milestones on the caller's clock."""
+    toward it).  ``sampling`` overrides the engine's default
+    :class:`SamplingOpts` for this request (``None`` inherits it).  The
+    engine fills the remaining fields: ``generated`` accumulates sampled
+    tokens, ``done`` flips when the budget or ``max_seq`` is reached, and
+    the ``*_s`` stamps record queue/latency milestones on the caller's
+    clock (``arrived_s`` is stamped at :meth:`ServingEngine.submit` when
+    the caller leaves it 0, ``first_token_s`` when the prefill's token
+    lands on the host)."""
     rid: int
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int = 16
     arrived_s: float = 0.0
+    sampling: Optional[SamplingOpts] = None
     # filled by the engine
     generated: List[int] = field(default_factory=list)
     done: bool = False
@@ -69,14 +95,20 @@ class Request:
 @dataclass
 class ServeStats:
     """Counters for one engine's lifetime: decode ``steps`` taken,
-    ``tokens_out`` emitted (prefill + decode), ``prefills`` run, and
-    ``recompiles`` — the number of jitted programs *this* engine's
-    requests caused to be built (0 on an engine that found everything in
-    a warm :class:`CompileCache`, which is how fleet-wide program
-    sharing is asserted)."""
+    ``tokens_out`` emitted (prefill + decode), ``prefills`` — *requests*
+    prefilled — and ``prefill_calls`` — prefill *jit invocations*; a
+    burst of k same-bucket admissions is k prefills but 1 prefill call.
+    ``sampled_tokens`` counts tokens drawn stochastically (from requests
+    whose effective :class:`SamplingOpts` temperature is > 0; the rest
+    are greedy).  ``recompiles`` is the number of jitted programs *this*
+    engine's requests caused to be built (0 on an engine that found
+    everything in a warm :class:`CompileCache`, which is how fleet-wide
+    program sharing is asserted)."""
     steps: int = 0
     tokens_out: int = 0
     prefills: int = 0
+    prefill_calls: int = 0
+    sampled_tokens: int = 0
     recompiles: int = 0
 
     @property
@@ -91,10 +123,17 @@ class ServingEngine:
     ``max_seq`` bounds prompt+generation length per slot.
     ``decode_mode`` selects the decode path: ``"batched"`` (default)
     advances every slot in one vmapped, cache-donating jit call with
-    on-device argmax and a single bulk transfer per tick, while
-    ``"per_slot"`` is the reference loop — one jit call and host sync
-    per active slot — kept for equivalence tests and benchmarking (token
-    streams are bit-identical across modes).  ``compile_cache`` /
+    on-device per-slot sampling and a single bulk transfer per tick,
+    while ``"per_slot"`` is the reference loop — one jit call and host
+    sync per active slot — kept for equivalence tests and benchmarking
+    (token streams are bit-identical across modes).  ``prefill_mode``
+    selects the admission path: ``"batched"`` (default under batched
+    decode) packs same-bucket waiting requests into one burst prefill
+    call; ``"per_request"`` is the sequential reference (and the only
+    path under ``decode_mode="per_slot"``, which has no stacked cache to
+    scatter into).  ``sampling`` is the default :class:`SamplingOpts`
+    for requests that don't carry their own — the zero default is greedy,
+    bit-identical to the pre-sampling engine.  ``compile_cache`` /
     ``compile_domain`` wire the engine into cross-engine program
     sharing: programs are keyed on ``(cfg, opts, slots, max_seq,
     domain)``, and ``compile_domain`` namespaces the key by compile
@@ -105,16 +144,26 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params: Params, *, slots: int = 8,
                  max_seq: int = 512, opts: RuntimeOptions = DEFAULT_OPTIONS,
                  decode_mode: str = "batched",
+                 prefill_mode: str = "batched",
+                 sampling: SamplingOpts = DEFAULT_SAMPLING,
                  compile_cache: Optional[CompileCache] = None,
                  compile_domain: str = ""):
         if decode_mode not in ("batched", "per_slot"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
+        if prefill_mode not in PREFILL_MODES:
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}; "
+                             f"expected one of {PREFILL_MODES}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.opts = opts
         self.decode_mode = decode_mode
+        # the per-slot reference loop has no stacked cache to scatter a
+        # burst into — it always admits per request
+        self.prefill_mode = ("per_request" if decode_mode == "per_slot"
+                             else prefill_mode)
+        self.sampling = sampling
         self.compile_cache = (compile_cache if compile_cache is not None
                               else GLOBAL_COMPILE_CACHE)
         self.compile_domain = compile_domain
@@ -147,6 +196,12 @@ class ServingEngine:
             self.stats.recompiles += 1
         return fn
 
+    def _prefill_batch_fn(self, bucket: int, k: int) -> Callable:
+        fn, fresh = self._programs.prefill_batch(bucket, k)
+        if fresh:
+            self.stats.recompiles += 1
+        return fn
+
     def _reset_caches(self) -> None:
         if self.decode_mode == "batched":
             self._cache = init_slot_cache(self.cfg, self.slots, self.max_seq,
@@ -157,6 +212,8 @@ class ServingEngine:
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
+        if not req.arrived_s:
+            req.arrived_s = time.perf_counter()
         self._queue.append(req)
 
     @property
@@ -170,51 +227,175 @@ class ServingEngine:
             b *= 2
         return min(b, self.max_seq)
 
+    def _k_bucket(self, k: int) -> int:
+        """Round a burst size up to its program bucket: powers of two,
+        capped at the slot count (mixed burst sizes then share a handful
+        of compiled admission programs)."""
+        b = 1
+        while b < k:
+            b *= 2
+        return min(b, self.slots)
+
+    def _sampling_of(self, req: Request) -> SamplingOpts:
+        return req.sampling if req.sampling is not None else self.sampling
+
     # ------------------------------------------------------------ stepping --
+    def _gather_burst(self, limit: int):
+        """Pop the head request plus every same-bucket waiter behind it
+        (up to ``limit``) off the queue.  The head anchors the bucket, so
+        an earlier waiter from another bucket is always admitted before
+        anything behind it — later same-bucket arrivals can share its
+        burst's free slots but never displace it.  Budget-spent requests
+        encountered on the way complete inline; passed-over requests keep
+        their relative order at the queue head.  Returns ``(bucket,
+        requests)``."""
+        head = self._queue.popleft()
+        bucket = self._bucket(len(head.prompt))
+        batch = [head]
+        if limit > 1:
+            kept: List[Request] = []
+            while self._queue and len(batch) < limit:
+                r = self._queue.popleft()
+                if len(r.generated) >= r.max_new_tokens:
+                    r.done = True
+                    continue
+                if self._bucket(len(r.prompt)) == bucket:
+                    batch.append(r)
+                else:
+                    kept.append(r)
+            for r in reversed(kept):
+                self._queue.appendleft(r)
+        return bucket, batch
+
+    def _emit_first(self, req: Request, token: int, stamp: float,
+                    free: List[int], slot: int) -> bool:
+        """Book-keep a request's prefill token; returns True when the
+        request stays active in ``slot`` (False = budget completed at
+        prefill, slot returned to the free pool)."""
+        req.generated.append(token)
+        if req.first_token_s is None:
+            # keep the original stamp across swap re-admissions: TTFT is
+            # submit→first token, not submit→latest re-prefill
+            req.first_token_s = stamp
+        self.stats.prefills += 1
+        self.stats.tokens_out += 1
+        if self._sampling_of(req).temperature > 0:
+            self.stats.sampled_tokens += 1
+        if len(req.generated) >= req.max_new_tokens:
+            req.done = True          # prefill token completed the budget
+            free.append(slot)
+            return False
+        self._active[slot] = req
+        return True
+
+    def _truncate(self, req: Request, bucket: int) -> None:
+        if len(req.prompt) > bucket:
+            # prompt exceeds max_seq (e.g. a swap re-queue whose prompt
+            # grew by the generated prefix): keep the newest context
+            req.prompt = req.prompt[-bucket:]
+
+    def _admit_burst(self, batch: List[Request], bucket: int,
+                     free: List[int]) -> None:
+        """ONE jitted call admits the whole burst: stacked ``(k, bucket)``
+        prompts are prefilled together and every row's cache + sampling
+        state is scattered into its slot on device.  Bursts smaller than
+        their k-bucket are padded with leading throwaway rows aimed at the
+        first real slot — written first, overwritten by the real row."""
+        k = len(batch)
+        kb = self._k_bucket(k)
+        pad = kb - k
+        slots_for = [free.pop(0) for _ in range(k)]
+        toks = np.zeros((kb, bucket), np.int32)
+        keys = np.zeros((kb, 2), np.uint32)
+        temps = np.zeros((kb,), np.float32)
+        top_ks = np.zeros((kb,), np.int32)
+        slot_ids = np.full((kb,), slots_for[0], np.int32)
+        for i, req in enumerate(batch):
+            self._truncate(req, bucket)
+            row = pad + i
+            toks[row, bucket - len(req.prompt):] = req.prompt  # left-pad
+            s = self._sampling_of(req)
+            keys[row] = request_key(s.seed, req.rid, len(req.generated))
+            temps[row] = s.temperature
+            top_ks[row] = s.top_k
+            slot_ids[row] = slots_for[i]
+        fn = self._prefill_batch_fn(bucket, kb)
+        first, self._cache = fn(self.params, self._cache, jnp.asarray(toks),
+                                jnp.asarray(slot_ids), jnp.asarray(keys),
+                                jnp.asarray(temps), jnp.asarray(top_ks))
+        first = jax.device_get(first)
+        self.stats.prefill_calls += 1
+        stamp = time.perf_counter()
+        for i, req in enumerate(batch):
+            self._emit_first(req, int(first[pad + i]), stamp, free,
+                             slots_for[i])
+
+    def _admit_one(self, req: Request, free: List[int]) -> None:
+        """Sequential reference admission: one prefill jit call for this
+        request, its first token drawn by the same ``sample_logits`` the
+        batched paths use."""
+        slot = free.pop(0)
+        bucket = self._bucket(len(req.prompt))
+        self._truncate(req, bucket)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, bucket - len(req.prompt):] = req.prompt  # left-pad
+        cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
+        logits, cache = self._prefill_fn(bucket)(
+            self.params, cache, jnp.asarray(toks))
+        self.stats.prefill_calls += 1
+        s = self._sampling_of(req)
+        key = jnp.asarray(request_key(s.seed, req.rid, len(req.generated)))
+        temp = jnp.float32(s.temperature)
+        top_k = jnp.int32(s.top_k)
+        tok, key = self._programs.sample_first(logits[0, -1], key, temp,
+                                               top_k)
+        nxt = int(tok)
+        stamp = time.perf_counter()
+        if not self._emit_first(req, nxt, stamp, free, slot):
+            return
+        if self.decode_mode == "batched":
+            # the stacked side is donated: the slot write is in place
+            self._cache = self._programs.admit_slot(
+                self._cache, cache, jnp.int32(slot), key, temp, top_k)
+        else:
+            cache["sample"] = {"key": key, "temp": temp, "top_k": top_k}
+            self._caches[slot] = cache
+
     def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self._active[slot] is not None or not self._queue:
-                continue
-            req = self._queue.popleft()
-            if len(req.generated) >= req.max_new_tokens:
+        free = [s for s in range(self.slots) if self._active[s] is None]
+        while free and self._queue:
+            head = self._queue[0]
+            if len(head.generated) >= head.max_new_tokens:
                 # re-queued after a swap with its budget already spent (or
                 # submitted with max_new_tokens=0): emitting another prefill
                 # token would overshoot the budget and double-count it.
-                req.done = True
+                self._queue.popleft()
+                head.done = True
                 continue
-            bucket = self._bucket(len(req.prompt))
-            if len(req.prompt) > bucket:
-                # prompt exceeds max_seq (e.g. a swap re-queue whose prompt
-                # grew by the generated prefix): keep the newest context
-                req.prompt = req.prompt[-bucket:]
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, bucket - len(req.prompt):] = req.prompt  # left-pad
-            cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
-            logits, cache = self._prefill_fn(bucket)(
-                self.params, cache, jnp.asarray(toks))
-            nxt = int(jnp.argmax(logits[0, -1, : self.cfg.vocab_size]))
-            req.generated.append(nxt)
-            self.stats.prefills += 1
-            self.stats.tokens_out += 1
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True      # prefill token completed the budget
-            elif self.decode_mode == "batched":
-                # the stacked side is donated: the slot write is in place
-                self._cache = self._programs.write_slot(
-                    self._cache, cache, jnp.int32(slot))
-                self._active[slot] = req
+            if self.prefill_mode == "batched":
+                bucket, batch = self._gather_burst(len(free))
+                self._admit_burst(batch, bucket, free)
             else:
-                self._caches[slot] = cache
-                self._active[slot] = req
+                self._queue.popleft()
+                self._admit_one(head, free)
 
     def _decode_batched(self) -> int:
         if not any(r is not None for r in self._active):
             return 0
         tokens = np.zeros(self.slots, np.int32)
+        sampling = False
         for slot, req in enumerate(self._active):
             if req is not None:
                 tokens[slot] = req.generated[-1]
-        nxt, pos, self._cache = self._programs.decode(
+                sampling = sampling or \
+                    self._sampling_of(req).temperature > 0
+        # all-greedy ticks take the pure-argmax program: no per-slot
+        # argsort/categorical work selected away by a where — the default
+        # greedy engine keeps its historical hot-path cost.  Outputs are
+        # bit-identical either way, so mixed workloads can alternate.
+        step_fn = (self._programs.decode if sampling
+                   else self._programs.decode_greedy)
+        nxt, pos, self._cache = step_fn(
             self.params, self._cache, jnp.asarray(tokens))
         nxt, pos = jax.device_get((nxt, pos))   # one bulk transfer per tick
         emitted = 0
@@ -223,6 +404,8 @@ class ServingEngine:
                 continue
             req.generated.append(int(nxt[slot]))
             emitted += 1
+            if self._sampling_of(req).temperature > 0:
+                self.stats.sampled_tokens += 1
             if len(req.generated) >= req.max_new_tokens \
                     or int(pos[slot]) >= self.max_seq - 1:
                 req.done = True
@@ -234,13 +417,14 @@ class ServingEngine:
         for slot, req in enumerate(self._active):
             if req is None:
                 continue
-            tok = jnp.asarray([req.generated[-1]], jnp.int32)
-            logits, cache = self._programs.decode_ref(
+            tok = jnp.asarray(req.generated[-1], jnp.int32)
+            nxt, cache = self._programs.sample_ref(
                 self.params, self._caches[slot], tok)
             self._caches[slot] = cache
-            nxt = int(jnp.argmax(logits[0, : self.cfg.vocab_size]))
-            req.generated.append(nxt)
+            req.generated.append(int(nxt))
             emitted += 1
+            if self._sampling_of(req).temperature > 0:
+                self.stats.sampled_tokens += 1
             if len(req.generated) >= req.max_new_tokens \
                     or int(cache["pos"]) >= self.max_seq - 1:
                 req.done = True
@@ -291,7 +475,9 @@ class ServingEngine:
         generated prefix (retraining-free variant switching).  The stacked
         cache is rebuilt once per generation; programs come from the
         compile cache, so swapping back to an already-served variant
-        costs zero compiles."""
+        costs zero compiles.  A re-admitted request's PRNG key is folded
+        with its consumed-token count, so its resumed stream advances
+        deterministically instead of replaying."""
         pending = [r for r in self._active if r is not None]
         for r in pending:
             r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,

@@ -1,8 +1,11 @@
 """Slot-batched decode path: greedy streams must be bit-identical to the
 per-slot reference under mixed prompt lengths, mid-stream admissions,
 slot recycling and mid-decode variant swaps; the donated stacked cache
-must never be reused; and engines sharing a CompileCache must not
-recompile shared programs."""
+must never be reused; engines sharing a CompileCache must not recompile
+shared programs (even with heterogeneous per-slot sampling and
+mixed-size admission bursts); a burst of k same-bucket requests costs
+exactly ONE prefill jit call; and batched admission never starves an
+earlier waiter from another bucket."""
 from collections import deque
 
 import jax
@@ -11,7 +14,8 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.model import init_params
-from repro.serving import CompileCache, Request, ServingEngine
+from repro.serving import (CompileCache, Request, SamplingOpts,
+                           ServingEngine)
 
 CFG = get_config("paper-backbone").with_updates(
     num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
@@ -168,6 +172,110 @@ def test_compile_domain_isolates_platforms():
     e3 = ServingEngine(CFG, PARAMS, slots=2, max_seq=64,
                        compile_cache=cc, compile_domain="jetson_agx_orin")
     assert e3.stats.recompiles == 1   # other platform: own programs
+
+
+# ------------------------------------------------------ batched admission --
+def test_burst_admission_issues_exactly_one_prefill_call():
+    """Acceptance pin: admitting a burst of k same-bucket requests runs
+    ONE prefill jit call, with streams bit-identical to sequential
+    per-request admission (k calls)."""
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(0, CFG.vocab_size, size=9).astype(np.int32)
+               for _ in range(4)]
+
+    def run(prefill_mode):
+        eng = ServingEngine(CFG, PARAMS, slots=4, max_seq=64,
+                            prefill_mode=prefill_mode, compile_cache=CC)
+        reqs = [Request(rid=i, prompt=prompts[i].copy(), max_new_tokens=4)
+                for i in range(4)]
+        for r in reqs:
+            eng.submit(r)
+        eng.step()
+        calls_after_admit = eng.stats.prefill_calls
+        eng.drain()
+        return [tuple(r.generated) for r in reqs], calls_after_admit, eng
+
+    batched_streams, batched_calls, eng = run("batched")
+    sequential_streams, sequential_calls, _ = run("per_request")
+    assert batched_calls == 1
+    assert sequential_calls == 4
+    assert eng.stats.prefills == 4        # still one *prefill* per request
+    assert batched_streams == sequential_streams
+
+
+def test_per_slot_decode_forces_per_request_admission():
+    eng = _engine("per_slot")
+    assert eng.prefill_mode == "per_request"
+
+
+def test_heterogeneous_sampling_and_mixed_bursts_share_programs():
+    """Fleet regression: same-platform engines with different per-slot
+    sampling policies and different admission burst sizes must find every
+    program warm — sampling state and burst membership are runtime data,
+    never compile keys."""
+    cc = CompileCache()
+
+    def serve(sampling_for, burst_sizes):
+        eng = ServingEngine(CFG, PARAMS, slots=4, max_seq=64,
+                            compile_cache=cc, compile_domain="pixel_6_cpu")
+        rng = np.random.default_rng(3)
+        rid = 0
+        for size in burst_sizes:
+            for _ in range(size):
+                eng.submit(Request(
+                    rid=rid, sampling=sampling_for(rid),
+                    prompt=rng.integers(0, CFG.vocab_size, size=int(
+                        rng.integers(4, 15))).astype(np.int32),
+                    max_new_tokens=3))
+                rid += 1
+            eng.drain()
+        return eng
+
+    # first engine warms every (bucket, k-bucket) admission program
+    e0 = serve(lambda rid: None, burst_sizes=(4, 2, 1, 3))
+    assert e0.stats.recompiles > 0
+    # second same-platform engine: heterogeneous per-request sampling and
+    # a different burst mix — compiles NOTHING
+    e1 = serve(lambda rid: SamplingOpts(temperature=0.3 * rid,
+                                        top_k=rid % 3, seed=rid),
+               burst_sizes=(3, 1, 4, 2))
+    assert e1.stats.recompiles == 0
+    assert e1.stats.sampled_tokens > 0    # the sampled slots really sampled
+    # another platform still pays for its own binaries
+    e2 = ServingEngine(CFG, PARAMS, slots=4, max_seq=64,
+                       compile_cache=cc, compile_domain="jetson_agx_orin")
+    assert e2.stats.recompiles == 1
+
+
+def test_earlier_cross_bucket_waiter_is_not_starved():
+    """A stream of short same-bucket arrivals can share a burst's free
+    slots, but the head of the queue anchors every burst — an earlier
+    waiter from another bucket is always admitted before anything
+    submitted behind it."""
+    rng = np.random.default_rng(13)
+
+    def short():
+        return rng.integers(0, CFG.vocab_size, size=6).astype(np.int32)
+
+    eng = _engine("batched", slots=2)
+    # occupy both slots with bucket-16 requests
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=short(), max_new_tokens=12))
+    eng.step()
+    # an odd-bucket request waits...
+    other = Request(rid=100,
+                    prompt=rng.integers(0, CFG.vocab_size, size=20)
+                    .astype(np.int32), max_new_tokens=2)
+    eng.submit(other)
+    # ...while short bucket-16 requests keep arriving behind it
+    late = [Request(rid=200 + i, prompt=short(), max_new_tokens=2)
+            for i in range(6)]
+    for r in late:
+        eng.submit(r)
+    eng.drain()
+    assert other.done
+    assert other.first_token_s is not None
+    assert all(other.first_token_s < r.first_token_s for r in late)
 
 
 # -------------------------------------------------------------- scheduler --

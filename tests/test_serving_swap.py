@@ -77,6 +77,24 @@ def test_prompt_longer_than_max_seq_is_truncated_not_crashed(mode):
     assert eng.stats.tokens_out >= 1
 
 
+def test_swap_preserves_first_token_stamp(mode):
+    # TTFT is submit→first token; a swap re-queue's re-prefill must not
+    # restamp it (the re-queued copy carries the original stamp)
+    eng = _engine(mode)
+    req = Request(rid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                  max_new_tokens=6)
+    eng.submit(req)
+    eng.step()
+    stamp = req.first_token_s
+    assert stamp is not None
+    eng.swap_model(CFG, PARAMS, eng.opts)
+    requeued = eng._queue[0]
+    assert requeued.first_token_s == stamp
+    eng.drain()
+    assert requeued.done
+    assert requeued.first_token_s == stamp
+
+
 def test_step_timing_hook_fires(mode):
     eng = _engine(mode)
     seen = []
