@@ -12,6 +12,13 @@ phone-tier member sharing a site with idle helpers:
    (``inject_load``), how many clock events (device wakes) and how much
    simulated time pass before the controller moves the work.
 
+The fleet run's placer keeps a per-decision audit trail
+(:class:`~repro.fleet.placement.PlacementAudit`): every sweep records
+the chains it considered with their scored latencies, how many were
+DP-infeasible, which chain won and why, and whether hysteresis held the
+incumbent.  That decision log lands in the JSON so a placement change
+in a trend diff can be traced to the exact sweep that made it.
+
 Results go to stdout (``name,us_per_call,derived`` CSV) and to
 ``BENCH_placement.json`` for trend tracking.
 
@@ -65,6 +72,34 @@ def _controller(fleet, cfg, shape, placement: bool) -> FleetController:
         warmup_ticks=4, recalibrate_every=2)
     ctl.set_sla(fleet[0].device_id, PHONE_SLA_S)
     return ctl
+
+
+def _decision_log(placer) -> dict:
+    """Summarize the placer's audit trail for the JSON artifact: every
+    decision with the chains it scored, plus rollup counts (how often
+    hysteresis held the incumbent, how many candidates were
+    DP-infeasible)."""
+    decisions = []
+    for a in placer.audits:
+        decisions.append({
+            "requester": a.requester,
+            "t_s": a.timestamp_s,
+            "considered": len(a.considered),
+            "infeasible": a.infeasible,
+            "chosen": ">".join(a.chosen),
+            "chosen_latency_s": a.chosen_latency_s,
+            "reason": a.reason,
+            "held_by_hysteresis": a.held_by_hysteresis,
+            "chains": [{"hosts": ">".join(c), "latency_s": lat}
+                       for c, lat in zip(a.considered, a.latencies)],
+        })
+    return {
+        "decisions": decisions,
+        "total": len(decisions),
+        "held_by_hysteresis": sum(
+            1 for a in placer.audits if a.held_by_hysteresis),
+        "infeasible_total": sum(a.infeasible for a in placer.audits),
+    }
 
 
 def run(quick: bool = False, json_path: str = JSON_PATH) -> None:
@@ -122,6 +157,7 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> None:
         }
         if placement:
             results["placement_events"] = ctl.placement_events
+            results["decision_log"] = _decision_log(ctl.placer)
     speedup = p95["local_only"]["p95_s"] / max(p95["fleet"]["p95_s"], 1e-12)
     results["phone_p95"] = {**{f"{k}_{f}": v for k, d in p95.items()
                                for f, v in d.items()},
@@ -131,6 +167,10 @@ def run(quick: bool = False, json_path: str = JSON_PATH) -> None:
          f"speedup={speedup:.1f};"
          f"viol_local={p95['local_only']['violations']};"
          f"viol_fleet={p95['fleet']['violations']}")
+    dlog = results["decision_log"]
+    emit("placement.decisions", 0.0,
+         f"total={dlog['total']};held={dlog['held_by_hysteresis']};"
+         f"infeasible={dlog['infeasible_total']}")
 
     # ---- 3. reaction to a helper slowdown ------------------------------
     ctl = _controller(fleet, cfg, shape, True)

@@ -7,8 +7,15 @@ streams, checks that a second engine sharing a warm CompileCache
 compiles nothing, and runs an admission-burst scenario (N same-bucket
 requests arrive at once) comparing batched-prefill admission — ONE jit
 call for the whole burst — against the sequential per-request reference
-on prefill calls per request and p95 time-to-first-token.  Results go to
-stdout (the ``name,us_per_call,derived`` CSV contract) and to
+on prefill calls per request and p95 time-to-first-token.  TTFT is
+derived from request-lifecycle trace spans (``repro.obs.query``) and
+cross-checked against the legacy ``first_token_s - arrived_s`` stamps.
+An observability-overhead section decodes the same workload with
+tracing off and on: the traced run must stay bit-identical, compile
+nothing (spans stay out of jitted code), and cost at most a small
+factor in throughput; its trace is written next to the JSON for
+``tools/check_trace.py`` to validate in CI.  Results go to stdout (the
+``name,us_per_call,derived`` CSV contract) and to
 ``BENCH_serving.json`` for trend tracking.
 
   PYTHONPATH=src python -m benchmarks.bench_serving [--quick] [--json PATH]
@@ -23,6 +30,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import init_params
+from repro.obs import (NULL_RECORDER, TraceRecorder, request_ttft_s,
+                       write_trace)
 from repro.serving import CompileCache, Request, ServingEngine
 
 from .common import emit, header
@@ -86,13 +95,22 @@ def _admission_burst(params, cc: CompileCache, n: int = BURST_N):
     admission (one jit call) against the sequential per-request reference.
     Programs are pre-warmed on a throwaway engine so compile time doesn't
     pollute time-to-first-token; the measured engine must find everything
-    in the warm cache (``recompiles == 0``)."""
+    in the warm cache (``recompiles == 0``).
+
+    TTFT comes out of the request-lifecycle trace spans
+    (``req.queued``/``req.first_token`` instants via ``request_ttft_s``)
+    and is cross-checked bit-for-bit against the legacy per-request
+    ``first_token_s - arrived_s`` stamps — the spans carry the exact same
+    floats, so any drift means the instrumentation moved off the
+    admission path."""
     out = {"n": n}
     for prefill_mode in ("per_request", "batched"):
-        reqs = []
-        for _ in range(2):           # first pass warms, second measures
+        reqs, rec = [], None
+        for i_pass in range(2):      # first pass warms, second measures
+            rec = TraceRecorder() if i_pass == 1 else NULL_RECORDER
             eng = ServingEngine(CFG, params, slots=n, max_seq=256,
-                                prefill_mode=prefill_mode, compile_cache=cc)
+                                prefill_mode=prefill_mode, compile_cache=cc,
+                                recorder=rec)
             rng = np.random.default_rng(7)
             reqs = [Request(rid=i,
                             prompt=rng.integers(0, CFG.vocab_size, size=24)
@@ -102,16 +120,60 @@ def _admission_burst(params, cc: CompileCache, n: int = BURST_N):
                 eng.submit(r)
             eng.step()               # the admission burst + first decode
             eng.drain()
-        ttft = sorted(r.first_token_s - r.arrived_s for r in reqs)
+        legacy = {r.rid: r.first_token_s - r.arrived_s for r in reqs}
+        span = request_ttft_s(rec)
+        ttft = sorted(span.values())
         out[prefill_mode] = {
             "prefill_calls": eng.stats.prefill_calls,
             "prefills": eng.stats.prefills,
             "prefill_calls_per_request": eng.stats.prefill_calls / n,
             "p95_ttft_ms": ttft[min(n - 1, int(0.95 * n))] * 1e3,
             "recompiles": eng.stats.recompiles,
+            "ttft_source": "trace_spans",
+            "ttft_span_matches_legacy": span == legacy,
         }
     out["p95_ttft_speedup"] = (out["per_request"]["p95_ttft_ms"]
                                / max(out["batched"]["p95_ttft_ms"], 1e-9))
+    return out
+
+
+def _obs_overhead(params, steps: int, cc: CompileCache,
+                  trace_path: str = ""):
+    """Decode the same workload with tracing off and on.
+
+    The recorder sits entirely on the host side of the engine (python
+    appends around the jitted calls), so the traced run must (a) produce
+    bit-identical token streams, (b) compile nothing new — spans never
+    enter jitted code — and (c) cost at most a small factor in
+    steady-state throughput.  When ``trace_path`` is set the traced
+    run's recorder is exported there for ``tools/check_trace.py``."""
+    out = {}
+    streams = {}
+    for label, rec in (("off", NULL_RECORDER), ("on", TraceRecorder())):
+        eng = ServingEngine(CFG, params, slots=4, max_seq=256,
+                            compile_cache=cc, recorder=rec)
+        reqs = _requests(4, max_new_tokens_for(steps), seed=3)
+        for r in reqs:
+            eng.submit(r)
+        eng.step()                   # admit + prefill + first decode (warm)
+        eng.step()
+        eng.step_times.clear()
+        t0 = time.perf_counter()
+        emitted = 0
+        for _ in range(steps):
+            emitted += eng.step()
+        wall = time.perf_counter() - t0
+        eng.drain()
+        streams[label] = [tuple(r.generated) for r in reqs]
+        out[label] = {"tokens_per_s": emitted / wall,
+                      "recompiles": eng.stats.recompiles,
+                      "events": len(rec.events) if rec.enabled else 0}
+        if rec.enabled and trace_path:
+            write_trace(rec, trace_path)
+            out[label]["trace"] = trace_path
+    out["bit_identical"] = streams["off"] == streams["on"]
+    out["overhead_factor"] = (out["off"]["tokens_per_s"]
+                              / max(out["on"]["tokens_per_s"], 1e-12))
     return out
 
 
@@ -125,7 +187,8 @@ def _token_streams(params, mode: str, slots: int, cc: CompileCache):
     return [tuple(r.generated) for r in reqs]
 
 
-def run(quick: bool = False, json_path: str = "BENCH_serving.json") -> None:
+def run(quick: bool = False, json_path: str = "BENCH_serving.json",
+        trace_path: str = "BENCH_serving_trace.json") -> None:
     header("serving: per-slot loop vs slot-batched decode")
     slot_counts = QUICK_SLOT_COUNTS if quick else SLOT_COUNTS
     steps = QUICK_MEASURE_STEPS if quick else MEASURE_STEPS
@@ -186,6 +249,19 @@ def run(quick: bool = False, json_path: str = "BENCH_serving.json") -> None:
     emit("serving.admit.p95_ttft_speedup", 0.0,
          f"x{burst['p95_ttft_speedup']:.2f}")
 
+    # observability overhead: same workload with tracing off vs on —
+    # identical streams, zero recompiles, small throughput factor, and
+    # the traced run's export feeds tools/check_trace.py in CI
+    obs = _obs_overhead(params, steps, cc, trace_path=trace_path)
+    results["obs_overhead"] = obs
+    emit("serving.obs.off", 0.0, f"tok_per_s={obs['off']['tokens_per_s']:.0f}")
+    emit("serving.obs.on", 0.0,
+         f"tok_per_s={obs['on']['tokens_per_s']:.0f};"
+         f"events={obs['on']['events']};"
+         f"recompiles={obs['on']['recompiles']}")
+    emit("serving.obs.overhead_factor", 0.0,
+         f"x{obs['overhead_factor']:.3f}")
+
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {json_path}")
@@ -201,6 +277,15 @@ def run(quick: bool = False, json_path: str = "BENCH_serving.json") -> None:
             "burst admission split into multiple prefill calls"
         assert burst["batched"]["recompiles"] == 0, \
             "warm burst admission recompiled"
+        for m in ("per_request", "batched"):
+            assert burst[m]["ttft_span_matches_legacy"], \
+                f"span-derived TTFT drifted from first_token_s - " \
+                f"arrived_s ({m})"
+        assert obs["bit_identical"], "tracing changed the token streams"
+        assert obs["on"]["recompiles"] == 0, \
+            "tracing caused recompilation (span code leaked into jit?)"
+        assert obs["overhead_factor"] < 2.0, \
+            f"tracing overhead too high (x{obs['overhead_factor']:.2f})"
 
 
 if __name__ == "__main__":
@@ -208,6 +293,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default="BENCH_serving.json")
+    ap.add_argument("--trace", default="BENCH_serving_trace.json",
+                    help="where the traced obs-overhead run exports its "
+                         "Chrome trace (validated by tools/check_trace.py)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(quick=args.quick, json_path=args.json)
+    run(quick=args.quick, json_path=args.json, trace_path=args.trace)

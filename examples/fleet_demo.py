@@ -9,6 +9,12 @@ ServingEngine on a tiny model — its measured decode-step wall-times
 (not simulated silicon) are what telemetry sees for that device, and
 its step-time EWMA stretches the device's wake period.
 
+The whole run is traced: a :class:`TraceRecorder` collects spans from
+all four layers (request lifecycle, engine steps, fleet clock events,
+placement decisions) on the shared simulated-clock timebase and writes
+``trace.json`` — open it at https://ui.perfetto.dev ("Open trace file")
+or ``chrome://tracing`` to see the cross-level loop as one timeline.
+
   PYTHONPATH=src python examples/fleet_demo.py
 """
 from __future__ import annotations
@@ -20,6 +26,7 @@ from repro.configs import get_config
 from repro.fleet import FleetController, build_fleet, fleet_report
 from repro.models.configs import InputShape
 from repro.models.model import init_params
+from repro.obs import LAYERS, TraceRecorder, write_trace
 from repro.serving import Request
 
 
@@ -40,9 +47,12 @@ def main() -> None:
               f"battery={'wall' if d.wall_powered else f'{d.battery_wh}Wh'}")
 
     # traces longer than the horizon so fast devices never idle out —
-    # their extra wakes are the point of event-driven stepping
+    # their extra wakes are the point of event-driven stepping.
+    # placement=True so the placement layer shows up in the trace too.
+    recorder = TraceRecorder()
     ctl = FleetController(fleet, cfg, shape, trace_ticks=80,
-                          warmup_ticks=4)
+                          warmup_ticks=4, placement=True,
+                          recorder=recorder)
 
     # back the light-tier device with a real engine: measured step times
     # become its telemetry observations.  build_engine wires it to the
@@ -85,6 +95,18 @@ def main() -> None:
           f"{engine.stats.tokens_out} tokens, "
           f"median step {sorted(engine.step_times)[done // 2]*1e3:.2f} ms, "
           f"ewma {engine.step_time_ewma_s*1e3:.2f} ms")
+
+    # ---- one timeline for the whole cross-level loop ----------------
+    path = write_trace(recorder, "trace.json")
+    by_layer = {cat: sum(1 for e in recorder.events if e.cat == cat)
+                for cat in LAYERS}
+    print(f"\ntrace: {len(recorder.events)} events -> {path} "
+          f"(open in https://ui.perfetto.dev)")
+    for cat in LAYERS:
+        print(f"  {cat:10s} {by_layer[cat]:5d} events")
+    print("metrics snapshot (fleet registry):")
+    for name, val in ctl.metrics.snapshot().items():
+        print(f"  {name:28s} {val}")
 
 
 if __name__ == "__main__":

@@ -46,8 +46,16 @@ class AdaptationLoop:
     measured_accuracy: Dict[VariantSpec, float] = field(default_factory=dict)
     allow_offload: bool = True
     hysteresis: float = 0.05        # don't switch for <5% predicted gain
+    # observability hooks: the fleet controller installs its recorder and
+    # the owning device's id, so each decision lands as a loop.decide
+    # trace instant on that device's track
+    recorder: object = None
+    obs_pid: str = "loop"
 
     def __post_init__(self):
+        if self.recorder is None:
+            from repro.obs import NULL_RECORDER
+            self.recorder = NULL_RECORDER
         self.monitor = ResourceMonitor()
         self.evaluator = ActionEvaluator(self.cfg, self.shape, self.hw,
                                          measured=self.measured_accuracy)
@@ -140,6 +148,14 @@ class AdaptationLoop:
                 choice, reason = cur, "hold (hysteresis)"
         d = Decision(tick=self._tick, ctx=ctx, action=choice.action,
                      eval=choice, reason=reason)
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "loop.decide", pid=self.obs_pid, tid="loop", cat="fleet",
+                args={"tick": self._tick, "reason": reason,
+                      "variant": str(choice.action.variant),
+                      "offloaded": choice.action.offload.enabled,
+                      "latency_s": choice.latency_s,
+                      "accuracy": choice.accuracy})
         self.current = d
         self.decisions.append(d)
         return d

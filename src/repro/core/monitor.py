@@ -40,12 +40,20 @@ class ResourceContext:
 
 
 class ResourceMonitor:
-    """Polls a context source (synthetic trace or live callbacks)."""
+    """Polls a context source (synthetic trace or live callbacks).
+
+    ``recorder``/``obs_pid`` are the observability hooks: when a
+    :class:`~repro.obs.recorder.TraceRecorder` is installed (the fleet
+    controller wires its own into every member's monitor), each context
+    update lands as a ``monitor.context`` trace instant."""
 
     def __init__(self, source: Optional[Iterator[ResourceContext]] = None):
         self._source = source
         self._history: List[ResourceContext] = []
         self.current = ResourceContext()
+        from repro.obs import NULL_RECORDER
+        self.recorder = NULL_RECORDER
+        self.obs_pid = "monitor"
 
     def tick(self) -> ResourceContext:
         if self._source is not None:
@@ -60,6 +68,15 @@ class ResourceMonitor:
         return list(self._history)
 
     def set(self, ctx: ResourceContext) -> None:
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "monitor.context", pid=self.obs_pid, tid="monitor",
+                cat="fleet",
+                args={"battery_frac": ctx.battery_frac,
+                      "mem_free_frac": ctx.mem_free_frac,
+                      "cpu_temp_derate": ctx.cpu_temp_derate,
+                      "competing_procs": ctx.competing_procs,
+                      "data_drift": ctx.data_drift})
         self.current = ctx
 
 

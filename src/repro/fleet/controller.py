@@ -37,6 +37,7 @@ from repro.core.loop import AdaptationLoop, Decision
 from repro.core.monitor import ResourceContext
 from repro.core.optimizer import DRIFT_ACCURACY_COST, Budgets
 from repro.models.configs import InputShape, ModelConfig
+from repro.obs import NULL_RECORDER, MetricsRegistry
 from repro.serving import CompileCache
 
 from .placement import FleetPlacer, PlacementDecision, SiteTopology
@@ -122,6 +123,8 @@ class FleetController:
                  placement_every_s: Optional[float] = None,
                  placement_drift: float = 0.15,
                  placement_hysteresis: float = 0.15,
+                 recorder=NULL_RECORDER,
+                 metrics: Optional[MetricsRegistry] = None,
                  seed: int = 0):
         if step_mode not in STEP_MODES:
             raise ValueError(f"unknown step_mode {step_mode!r}; "
@@ -129,7 +132,24 @@ class FleetController:
         self.cfg = cfg
         self.shape = shape
         self.step_mode = step_mode
+        # ---- observability ------------------------------------------
+        # One recorder, one simulated clock: the controller installs its
+        # fleet clock into the recorder, so engine spans (wall-time) and
+        # fleet clock events export onto a single shared timebase.  The
+        # metrics registry replaces the old scattered tallies (_wakes,
+        # placement_events); the public attributes below are views.
+        self.recorder = recorder
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if recorder.enabled and getattr(recorder, "sim_clock", None) is None:
+            recorder.sim_clock = self._sim_now
+        self._wake_counter = self.metrics.counter("fleet.wakes")
+        self._placement_counter = self.metrics.counter(
+            "fleet.placement_events")
+        self._violation_counter = self.metrics.counter("fleet.violations")
+        self._energy_counter = self.metrics.counter("fleet.energy_j")
+        self._recal_counter = self.metrics.counter("fleet.recalibrations")
         self.telemetry = TelemetryStore()
+        self.telemetry.recorder = recorder
         # fleet-level jit-program cache: engine-backed devices of the same
         # platform share compiled decode/prefill programs through this
         self.compile_cache = (compile_cache if compile_cache is not None
@@ -158,6 +178,12 @@ class FleetController:
                 memory_bytes=spec.hw.hbm_bytes * spec.chips)
             trace = (trace_factory(spec, trace_ticks) if trace_factory
                      else device_trace(spec, trace_ticks))
+            # each member's loop + monitor report onto this device's
+            # trace track
+            loop.recorder = self.recorder
+            loop.obs_pid = spec.device_id
+            loop.monitor.recorder = self.recorder
+            loop.monitor.obs_pid = spec.device_id
             self._devices[spec.device_id] = _DeviceRuntime(
                 spec=spec, loop=loop, trace=iter(trace),
                 rng=random.Random(seed * 7919 + spec.trace_seed),
@@ -193,8 +219,6 @@ class FleetController:
         self.placement = placement
         self.placer: Optional[FleetPlacer] = None
         self.placement_log: List[Tuple[float, int, PlacementDecision]] = []
-        self.placement_events = 0     # re-placement sweeps run
-        self._wakes = 0               # device wakes processed (clock events)
         self._placement_drift = placement_drift
         self._place_period_s = (placement_every_s if placement_every_s
                                 is not None else self._cal_period_s)
@@ -202,6 +226,7 @@ class FleetController:
         if placement:
             self.placer = FleetPlacer(cfg, topology,
                                       hysteresis=placement_hysteresis)
+            self.placer.recorder = self.recorder
             for d in self._devices.values():
                 self.placer.register(d.spec)
                 # placements flow back through the evaluator: fleet-peer
@@ -213,6 +238,18 @@ class FleetController:
                 self._push(self._next_place_s, _PLACEMENT_WAKE)
 
     # ----------------------------------------------------------- plumbing --
+    def _sim_now(self) -> float:
+        """The simulated fleet-clock reading trace events are stamped
+        with: the event clock under event stepping, the global tick
+        under lockstep."""
+        return self._now if self.step_mode == "event" else float(self._tick)
+
+    @property
+    def placement_events(self) -> int:
+        """Re-placement sweeps run (view over ``fleet.placement_events``
+        in the metrics registry)."""
+        return self._placement_counter.value
+
     @property
     def devices(self) -> List[DeviceSpec]:
         return [d.spec for d in self._devices.values()]
@@ -249,8 +286,15 @@ class FleetController:
         """Back a device with a real ServingEngine: its measured step
         wall-times replace the simulated observation for that device,
         and (in event mode) its step-time EWMA feeds the device's
-        next-wake estimate."""
+        next-wake estimate.  An engine still carrying the no-op default
+        recorder adopts the fleet's, with this device's id as its trace
+        pid — its step/prefill/request spans then land on the device's
+        track of the fleet timeline."""
         d = self._devices[device_id]
+        erec = getattr(engine, "recorder", None)
+        if erec is not None and not erec.enabled and self.recorder.enabled:
+            engine.recorder = self.recorder
+            engine.pid = device_id
         d.engine = engine
         d.engine_steps = steps_per_tick
 
@@ -278,7 +322,8 @@ class FleetController:
             decode_mode=decode_mode, prefill_mode=prefill_mode,
             sampling=sampling if sampling is not None else DEFAULT_SAMPLING,
             compile_cache=self.compile_cache,
-            compile_domain=spec.compile_domain)
+            compile_domain=spec.compile_domain,
+            recorder=self.recorder, pid=device_id)
         self.attach_engine(device_id, engine, steps_per_tick)
         return engine
 
@@ -313,14 +358,36 @@ class FleetController:
                  ) -> Tuple[Optional[FleetTickRecord],
                             Optional[ResourceContext]]:
         """Advance one device by one wake at fleet-clock ``now_s``:
-        consume a trace context, adapt, execute, report telemetry."""
+        consume a trace context, adapt, execute, report telemetry.
+        The whole wake is one ``fleet.wake`` span on the device's track,
+        enclosing (in time) the loop decision, any engine steps, and the
+        telemetry report it produced."""
+        rec_on = self.recorder.enabled
+        if rec_on:
+            self.recorder.begin("fleet.wake", pid=d.spec.device_id,
+                                tid="wake", cat="fleet",
+                                args={"tick": d.ticks + 1})
+        out = self._advance_inner(d, now_s)
+        if rec_on:
+            frec = out[0]
+            args = {"exhausted": d.exhausted}
+            if frec is not None:
+                args.update(observed_s=frec.observed_s,
+                            violated=frec.violated)
+            self.recorder.end("fleet.wake", pid=d.spec.device_id,
+                              tid="wake", cat="fleet", args=args)
+        return out
+
+    def _advance_inner(self, d: _DeviceRuntime, now_s: float
+                       ) -> Tuple[Optional[FleetTickRecord],
+                                  Optional[ResourceContext]]:
         try:
             ctx = next(d.trace)
         except StopIteration:
             d.exhausted = True
             return None, None
         d.ticks += 1
-        self._wakes += 1
+        self._wake_counter.inc()
         self._sync_member(d, ctx)
         decision = d.loop.tick(ctx)
         raw = d.loop.evaluator.evaluate(decision.action, ctx,
@@ -348,6 +415,9 @@ class FleetController:
             observed_s=obs_s, observed_energy_j=obs_j,
             sla_s=d.sla_s, violated=obs_s > d.sla_s,
             timestamp_s=now_s)
+        if rec.violated:
+            self._violation_counter.inc()
+        self._energy_counter.inc(obs_j)
         self.records.append(rec)
         return rec, ctx
 
@@ -408,6 +478,12 @@ class FleetController:
         frac = ((zlib.crc32(mrec.device_id.encode())
                  + mrec.tick * 2654435761) % 1000) / 1000.0
         arrival = mrec.timestamp_s + frac * self._jitter_s
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "telemetry.report", pid=mrec.device_id, tid="telemetry",
+                cat="fleet",
+                args={"tick": mrec.tick, "channel": mrec.channel,
+                      "arrival_s": arrival})
         self._seq += 1
         heapq.heappush(self._pending, (arrival, self._seq, mrec))
 
@@ -457,7 +533,12 @@ class FleetController:
         against local variants on its next wake."""
         if self.placer is None:
             return
-        self.placement_events += 1
+        self._placement_counter.inc()
+        if self.recorder.enabled:
+            self.recorder.begin("placement.sweep", pid="fleet",
+                                tid="placement", cat="placement",
+                                args={"sweep": self._placement_counter.value})
+        changed = 0
         for d in self._devices.values():
             if d.spec.device_id not in self.placer.members:
                 continue
@@ -475,13 +556,18 @@ class FleetController:
             dec = self.placer.place(did, now_s=now_s)
             if prev is not None and dec.hosts == prev.hosts:
                 continue
-            self.placement_log.append((now_s, self._wakes, dec))
+            changed += 1
+            self.placement_log.append((now_s, self.wakes, dec))
             if dec.offloaded:
                 d.loop.set_offload_targets((OffloadChoice(
                     enabled=True, pool="fleet", level=self.placer.level,
                     peers=dec.hosts),))
             else:
                 d.loop.set_offload_targets(())
+        if self.recorder.enabled:
+            self.recorder.end("placement.sweep", pid="fleet",
+                              tid="placement", cat="placement",
+                              args={"changed": changed})
 
     def _resolve_pool(self, offload):
         """Evaluator hook: fleet-peer choices resolve through the placer
@@ -498,6 +584,11 @@ class FleetController:
         events."""
         if self.placer is None:
             raise RuntimeError("placement is not enabled on this fleet")
+        if self.recorder.enabled:
+            self.recorder.instant("fleet.inject_load", pid="fleet",
+                                  tid="control", cat="fleet",
+                                  args={"device": device_id,
+                                        "own_load": own_load})
         self.placer.update_member(device_id, own_load=own_load)
         self._schedule_placement(self._now)
 
@@ -510,6 +601,10 @@ class FleetController:
         d = self._devices[device_id]
         d.dropped = True
         d.exhausted = True
+        if self.recorder.enabled:
+            self.recorder.instant("fleet.drop_device", pid="fleet",
+                                  tid="control", cat="fleet",
+                                  args={"device": device_id})
         if self.placer is None:
             return []
         affected = self.placer.remove_member(device_id)
@@ -517,7 +612,7 @@ class FleetController:
             dec = self.placer.current(rid)
             if rid in self._devices and dec is not None:
                 self._devices[rid].loop.set_offload_targets(())
-                self.placement_log.append((self._now, self._wakes, dec))
+                self.placement_log.append((self._now, self.wakes, dec))
         self._schedule_placement(self._now)
         return affected
 
@@ -529,8 +624,9 @@ class FleetController:
     @property
     def wakes(self) -> int:
         """Device wakes processed so far — the clock-event count used to
-        bound re-placement reaction time."""
-        return self._wakes
+        bound re-placement reaction time (view over ``fleet.wakes`` in
+        the metrics registry)."""
+        return self._wake_counter.value
 
     def _next_period(self, d: _DeviceRuntime,
                      ctx: Optional[ResourceContext]) -> float:
@@ -632,6 +728,11 @@ class FleetController:
         task accuracy flows back the same way: the tier's per-variant
         drift-free estimates land in each evaluator's ``measured`` dict,
         so the accuracy proxy is corrected alongside latency/energy."""
+        self._recal_counter.inc()
+        if self.recorder.enabled:
+            self.recorder.begin("fleet.recalibrate", pid="fleet",
+                                tid="calibration", cat="fleet",
+                                args={"round": self._recal_counter.value})
         acc_by_tier: Dict[str, Dict] = {}
         for d in self._devices.values():
             chan = ENGINE if d.engine is not None else SIMULATED
@@ -649,6 +750,9 @@ class FleetController:
             if acc_by_tier[tier]:
                 d.loop.evaluator.measured.update(acc_by_tier[tier])
                 d.loop.front = []
+        if self.recorder.enabled:
+            self.recorder.end("fleet.recalibrate", pid="fleet",
+                              tid="calibration", cat="fleet")
 
     def calibration_of(self, device_id: str):
         return self._devices[device_id].loop.evaluator.calibration

@@ -9,13 +9,13 @@ for fleet members.  See :class:`FleetPlacer` for the search + hysteresis
 offloading :class:`DeviceProfile`.
 """
 from .placer import (FALLBACK, HOLD, INFEASIBLE, LOCAL, PLACED,
-                     FleetPlacer, PlacementDecision)
+                     FleetPlacer, PlacementAudit, PlacementDecision)
 from .profiles import MIN_CAPACITY_FRAC, MemberState, synthesize_profile
 from .topology import (DEFAULT_LAN, DEFAULT_WAN, LAN, SELF_LINK, WAN,
                        LinkSpec, SiteTopology)
 
 __all__ = ["FALLBACK", "HOLD", "INFEASIBLE", "LOCAL", "PLACED",
-           "FleetPlacer", "PlacementDecision", "MIN_CAPACITY_FRAC",
-           "MemberState", "synthesize_profile", "DEFAULT_LAN",
-           "DEFAULT_WAN", "LAN", "SELF_LINK", "WAN", "LinkSpec",
-           "SiteTopology"]
+           "FleetPlacer", "PlacementAudit", "PlacementDecision",
+           "MIN_CAPACITY_FRAC", "MemberState", "synthesize_profile",
+           "DEFAULT_LAN", "DEFAULT_WAN", "LAN", "SELF_LINK", "WAN",
+           "LinkSpec", "SiteTopology"]

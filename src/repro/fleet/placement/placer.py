@@ -30,6 +30,7 @@ from repro.core.monitor import ResourceContext
 from repro.core.profiler import Calibration
 from repro.fleet.registry import DeviceSpec
 from repro.models.configs import ModelConfig
+from repro.obs import NULL_RECORDER
 from repro.offload.graph_ir import build_model_graph
 from repro.offload.partition import PrePartition, pre_partition
 from repro.offload.placer import (NO_NEXT_LINK, DeviceProfile, Placement,
@@ -71,6 +72,33 @@ class PlacementDecision:
                 f"migrate={self.migration_s:.3g}s ({self.reason})")
 
 
+@dataclass(frozen=True)
+class PlacementAudit:
+    """Why one :meth:`FleetPlacer.place` call decided what it decided —
+    the decision log the benchmarks serialize and the trace's
+    ``placement.decide`` instants carry.
+
+    ``considered`` lists every candidate chain enumerated (in search
+    order) with its DP-predicted latency in ``latencies`` (``inf`` for
+    chains the DP rejected as infeasible, counted in ``infeasible``).
+    ``held_by_hysteresis`` marks sweeps where a challenger beat the
+    incumbent but not by the hysteresis margin (or couldn't amortize its
+    migration), so the incumbent was kept; ``incumbent_latency_s`` is
+    then the incumbent's *re-predicted* live latency the challenger was
+    judged against."""
+    requester: str
+    timestamp_s: float
+    considered: Tuple[Tuple[str, ...], ...]
+    latencies: Tuple[float, ...]
+    infeasible: int
+    chosen: Tuple[str, ...]
+    chosen_latency_s: float
+    reason: str
+    held_by_hysteresis: bool = False
+    incumbent_latency_s: Optional[float] = None
+    migration_s: float = 0.0
+
+
 class FleetPlacer:
     """Turns the live fleet into the offloading device pool.
 
@@ -100,6 +128,12 @@ class FleetPlacer:
             1.0, sum(cut_bytes) / len(cut_bytes))
         self._members: Dict[str, MemberState] = {}
         self._current: Dict[str, PlacementDecision] = {}
+        # decision log: one PlacementAudit per place() call; the fleet
+        # controller points ``recorder`` at its TraceRecorder so each
+        # audit also lands as a placement.decide trace instant
+        self.audits: List[PlacementAudit] = []
+        self.recorder = NULL_RECORDER
+        self.obs_pid = "fleet"
 
     # ------------------------------------------------------- membership ----
     def register(self, spec: DeviceSpec) -> MemberState:
@@ -256,15 +290,21 @@ class FleetPlacer:
             for h1, h2 in itertools.permutations(helpers, 2):
                 chains.append((requester, h1, h2))
 
+        considered: List[Tuple[str, ...]] = []
+        latencies: List[float] = []
+        infeasible = 0
         best: Optional[PlacementDecision] = None
         for ids in chains:
             profs = self.chain_profiles(ids)
+            considered.append(tuple(ids))
             if len(ids) == 1:
                 cand = local
             else:
                 try:
                     pl = place_dp(self.pp, profs, level=self.level)
                 except ValueError:
+                    infeasible += 1
+                    latencies.append(float("inf"))
                     continue
                 used = sorted(set(pl.assignment))
                 if used == [0]:
@@ -274,6 +314,7 @@ class FleetPlacer:
                     cand = PlacementDecision(
                         requester, tuple(ids), pl, pl.latency_s, mig,
                         PLACED, now_s)
+            latencies.append(cand.latency_s)
             if best is None or cand.latency_s < best.latency_s:
                 best = cand
         if best is None:
@@ -301,9 +342,39 @@ class FleetPlacer:
                     requester, cur_live.hosts, cur_live.placement,
                     cur_live.latency_s, 0.0, HOLD, now_s)
                 self._commit(held)
+                self._audit(held, considered, latencies, infeasible,
+                            held_by_hysteresis=True,
+                            incumbent_latency_s=cur_live.latency_s)
                 return held
         self._commit(best)
+        self._audit(best, considered, latencies, infeasible)
         return best
+
+    def _audit(self, dec: PlacementDecision,
+               considered: List[Tuple[str, ...]], latencies: List[float],
+               infeasible: int, *, held_by_hysteresis: bool = False,
+               incumbent_latency_s: Optional[float] = None) -> None:
+        """Log why this decision won (see :class:`PlacementAudit`)."""
+        audit = PlacementAudit(
+            requester=dec.requester, timestamp_s=dec.timestamp_s,
+            considered=tuple(considered), latencies=tuple(latencies),
+            infeasible=infeasible, chosen=dec.hosts,
+            chosen_latency_s=dec.latency_s, reason=dec.reason,
+            held_by_hysteresis=held_by_hysteresis,
+            incumbent_latency_s=incumbent_latency_s,
+            migration_s=dec.migration_s)
+        self.audits.append(audit)
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "placement.decide", pid=self.obs_pid, tid="placement",
+                cat="placement",
+                args={"requester": dec.requester,
+                      "chosen": " -> ".join(dec.hosts),
+                      "latency_s": dec.latency_s,
+                      "reason": dec.reason,
+                      "considered": len(considered),
+                      "infeasible": infeasible,
+                      "held_by_hysteresis": held_by_hysteresis})
 
     def _relive(self, dec: PlacementDecision) -> PlacementDecision:
         """The incumbent decision with its latency re-predicted under

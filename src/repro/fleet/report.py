@@ -146,11 +146,15 @@ def fleet_report(ctl: FleetController) -> FleetReport:
     if ctl.placer is not None:
         placements = {rid: dec.describe()
                       for rid, dec in ctl.placer.decisions.items()}
+    # fleet totals are views over the controller's metrics registry
+    # (incremented exactly where records are appended, so they always
+    # agree with a records-derived sum — test_obs.py pins this)
     return FleetReport(
         tiers=summaries,
         total_ticks=len(recs),
-        total_violations=sum(1 for r in recs if r.violated),
-        total_energy_j=float(sum(r.observed_energy_j for r in recs)),
+        total_violations=ctl.metrics.counter("fleet.violations").value,
+        total_energy_j=float(
+            ctl.metrics.counter("fleet.energy_j").value),
         violations_first_half=ctl.violations(last_s=mid_ts),
         violations_second_half=ctl.violations()
         - ctl.violations(last_s=mid_ts),

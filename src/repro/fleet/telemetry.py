@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.core.optimizer import DRIFT_ACCURACY_COST
 from repro.core.profiler import Calibration
+from repro.obs import NULL_RECORDER
 
 # measurement channels: what produced the observation
 SIMULATED = "simulated"     # latent-bias silicon simulation (analytic scale)
@@ -220,6 +221,12 @@ class TelemetryStore:
         self._kw = dict(window=window, alpha=alpha,
                         min_lsq_samples=min_lsq_samples)
         self._alpha = alpha
+        # observability: the fleet controller points this at its
+        # TraceRecorder so every merge lands as a telemetry.merge
+        # instant (flagging reports that arrived out of timestamp order)
+        self.recorder = NULL_RECORDER
+        self.obs_pid = "fleet"
+        self._max_ts_seen = float("-inf")
         self.records: List[MeasurementRecord] = []
         self.accuracy_records: List[AccuracyRecord] = []
         self._by_tier: Dict[Tuple[str, str], EwmaLsqCalibrator] = {}
@@ -236,6 +243,16 @@ class TelemetryStore:
         """Ingest one observation (any arrival order): append to the
         audit log and merge into the ``(tier, channel)`` and
         ``(device, channel)`` calibrators at its timestamp."""
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "telemetry.merge", pid=self.obs_pid, tid="telemetry",
+                cat="fleet",
+                args={"device": rec.device_id, "tier": rec.tier,
+                      "tick": rec.tick, "channel": rec.channel,
+                      "observed_ts_s": rec.timestamp_s,
+                      "out_of_order": rec.timestamp_s < self._max_ts_seen})
+        if rec.timestamp_s > self._max_ts_seen:
+            self._max_ts_seen = rec.timestamp_s
         self.records.append(rec)
         for key, table in (((rec.tier, rec.channel), self._by_tier),
                            ((rec.device_id, rec.channel), self._by_device)):

@@ -1,0 +1,37 @@
+"""Fleet-wide observability: tracing spans + metrics, one timeline.
+
+The paper's adaptation loop is only auditable if every layer leaves a
+record on a shared timebase.  This package provides:
+
+* :mod:`~repro.obs.recorder` — structured begin/end/instant events with
+  **dual timestamps** (wall ``perf_counter`` + the fleet's simulated
+  clock), a :class:`TraceRecorder` that collects them, and the no-op
+  :data:`NULL_RECORDER` default that keeps disabled hot paths at one
+  attribute load per tick;
+* :mod:`~repro.obs.metrics` — a :class:`MetricsRegistry` of counters,
+  gauges, EWMA gauges and P² streaming-quantile histograms that backs
+  the legacy public stat surfaces (``ServeStats``,
+  ``step_time_ewma_s``, the fleet's wake/violation tallies) as views;
+* :mod:`~repro.obs.export` — Chrome-trace/Perfetto ``trace.json``
+  export (pid=device, tid=slot/subsystem, ts on one chosen clock);
+* :mod:`~repro.obs.query` — span pairing and request-metric helpers
+  (span-derived TTFT/TPOT, per-rid token accounting).
+
+Span taxonomy and metric names are documented in
+``docs/OBSERVABILITY.md``; ``tools/check_trace.py`` validates exported
+traces in CI.
+"""
+from .export import chrome_trace, write_trace
+from .metrics import (Counter, EwmaGauge, Gauge, Histogram,
+                      MetricsRegistry)
+from .query import (Span, events, instants, request_token_counts,
+                    request_tpot_s, request_ttft_s, spans)
+from .recorder import (BEGIN, COUNTER, END, INSTANT, LAYERS,
+                       NULL_RECORDER, Event, NullRecorder, TraceRecorder)
+
+__all__ = ["chrome_trace", "write_trace",
+           "Counter", "EwmaGauge", "Gauge", "Histogram", "MetricsRegistry",
+           "Span", "events", "instants", "request_token_counts",
+           "request_tpot_s", "request_ttft_s", "spans",
+           "BEGIN", "COUNTER", "END", "INSTANT", "LAYERS",
+           "NULL_RECORDER", "Event", "NullRecorder", "TraceRecorder"]

@@ -45,6 +45,7 @@ heterogeneous per-slot policies still share every program.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -58,11 +59,16 @@ from repro.models.configs import ModelConfig
 from repro.models.layers import Params
 from repro.models.model import init_cache, init_slot_cache
 from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
+from repro.obs import NULL_RECORDER, MetricsRegistry
 
 from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, ServePrograms
 from .sampling import DEFAULT_SAMPLING, SamplingOpts, request_key
 
 PREFILL_MODES = ("batched", "per_request")
+
+# default observability pids: distinct per engine so two untagged
+# engines sharing one TraceRecorder never interleave on one track
+_ENGINE_SEQ = itertools.count()
 
 
 @dataclass
@@ -92,7 +98,6 @@ class Request:
     finished_s: Optional[float] = None
 
 
-@dataclass
 class ServeStats:
     """Counters for one engine's lifetime: decode ``steps`` taken,
     ``tokens_out`` emitted (prefill + decode), ``prefills`` — *requests*
@@ -103,17 +108,52 @@ class ServeStats:
     are greedy).  ``recompiles`` is the number of jitted programs *this*
     engine's requests caused to be built (0 on an engine that found
     everything in a warm :class:`CompileCache`, which is how fleet-wide
-    program sharing is asserted)."""
-    steps: int = 0
-    tokens_out: int = 0
-    prefills: int = 0
-    prefill_calls: int = 0
-    sampled_tokens: int = 0
-    recompiles: int = 0
+    program sharing is asserted).
+
+    Since the observability layer landed this is a **view** over the
+    engine's :class:`~repro.obs.metrics.MetricsRegistry` — each
+    attribute reads/writes the like-named ``engine.*`` counter, so the
+    historical ``eng.stats.steps`` surface and the registry can never
+    disagree.  A standalone ``ServeStats()`` owns a private registry."""
+
+    _COUNTERS = {"steps": "engine.steps",
+                 "tokens_out": "engine.tokens_out",
+                 "prefills": "engine.prefills",
+                 "prefill_calls": "engine.prefill_calls",
+                 "sampled_tokens": "engine.sampled_tokens",
+                 "recompiles": "engine.recompiles"}
+
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        for name in self._COUNTERS.values():
+            self.metrics.counter(name)
+
+    def _get(self, attr: str) -> int:
+        return self.metrics.counter(self._COUNTERS[attr]).value
+
+    def _set(self, attr: str, v: int) -> None:
+        self.metrics.counter(self._COUNTERS[attr]).value = v
+
+    steps = property(lambda s: s._get("steps"),
+                     lambda s, v: s._set("steps", v))
+    tokens_out = property(lambda s: s._get("tokens_out"),
+                          lambda s, v: s._set("tokens_out", v))
+    prefills = property(lambda s: s._get("prefills"),
+                        lambda s, v: s._set("prefills", v))
+    prefill_calls = property(lambda s: s._get("prefill_calls"),
+                             lambda s, v: s._set("prefill_calls", v))
+    sampled_tokens = property(lambda s: s._get("sampled_tokens"),
+                              lambda s, v: s._set("sampled_tokens", v))
+    recompiles = property(lambda s: s._get("recompiles"),
+                          lambda s, v: s._set("recompiles", v))
 
     @property
     def tokens_per_step(self) -> float:
         return self.tokens_out / max(self.steps, 1)
+
+    def __repr__(self) -> str:
+        fields = ", ".join(f"{a}={self._get(a)}" for a in self._COUNTERS)
+        return f"ServeStats({fields})"
 
 
 class ServingEngine:
@@ -147,7 +187,10 @@ class ServingEngine:
                  prefill_mode: str = "batched",
                  sampling: SamplingOpts = DEFAULT_SAMPLING,
                  compile_cache: Optional[CompileCache] = None,
-                 compile_domain: str = ""):
+                 compile_domain: str = "",
+                 recorder=NULL_RECORDER,
+                 pid: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if decode_mode not in ("batched", "per_slot"):
             raise ValueError(f"unknown decode_mode {decode_mode!r}")
         if prefill_mode not in PREFILL_MODES:
@@ -167,39 +210,56 @@ class ServingEngine:
         self.compile_cache = (compile_cache if compile_cache is not None
                               else GLOBAL_COMPILE_CACHE)
         self.compile_domain = compile_domain
-        self.stats = ServeStats()
+        # observability: recorder defaults to the no-op singleton (hot
+        # paths guard on ``recorder.enabled``); the pid names this
+        # engine's track in exported traces (the fleet controller passes
+        # the device id).  The metrics registry backs ``stats`` and the
+        # step-time EWMA/histogram — a shared registry makes a fleet's
+        # engines aggregate into one namespace.
+        self.recorder = recorder
+        self.pid = pid if pid is not None else f"engine{next(_ENGINE_SEQ)}"
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.stats = ServeStats(self.metrics)
+        self._ewma = self.metrics.ewma("engine.step_time_s", alpha=0.2)
+        self._step_hist = self.metrics.histogram("engine.step_time_hist_s")
         self._queue: Deque[Request] = deque()
         self._active: List[Optional[Request]] = [None] * slots
+        self.generation = 0
         self._programs: ServePrograms = self._bind_programs()
         self._reset_caches()
-        self.generation = 0
         # telemetry: wall-time of recent steps (bounded — engines are
         # long-lived); optional sink called with (step_seconds,
         # tokens_emitted, generation) — the back-end→front-end feedback
         # channel the fleet's TelemetryStore subscribes to.
         self.step_times: Deque[float] = deque(maxlen=2048)
         self.on_step: Optional[Callable[[float, int, int], None]] = None
-        self._step_ewma: Optional[float] = None
 
     # ------------------------------------------------------------ programs --
+    def _note_compile(self, what: str, **detail) -> None:
+        self.stats.recompiles += 1
+        if self.recorder.enabled:
+            self.recorder.instant("engine.compile", pid=self.pid,
+                                  tid="engine", cat="engine",
+                                  args={"what": what, **detail})
+
     def _bind_programs(self) -> ServePrograms:
         entry, fresh = self.compile_cache.entry_for(
             self.cfg, self.opts, self.slots, self.max_seq,
             self.compile_domain)
         if fresh:
-            self.stats.recompiles += 1
+            self._note_compile("programs", generation=self.generation)
         return entry
 
     def _prefill_fn(self, bucket: int) -> Callable:
         fn, fresh = self._programs.prefill(bucket)
         if fresh:
-            self.stats.recompiles += 1
+            self._note_compile("prefill", bucket=bucket)
         return fn
 
     def _prefill_batch_fn(self, bucket: int, k: int) -> Callable:
         fn, fresh = self._programs.prefill_batch(bucket, k)
         if fresh:
-            self.stats.recompiles += 1
+            self._note_compile("prefill_batch", bucket=bucket, k=k)
         return fn
 
     def _reset_caches(self) -> None:
@@ -214,6 +274,14 @@ class ServingEngine:
     def submit(self, req: Request) -> None:
         if not req.arrived_s:
             req.arrived_s = time.perf_counter()
+        if self.recorder.enabled:
+            # stamped with the exact arrival float, so span-derived TTFT
+            # (first_token − queued) equals the legacy subtraction bit
+            # for bit
+            self.recorder.instant("req.queued", pid=self.pid, tid="queue",
+                                  cat="request", wall_s=req.arrived_s,
+                                  args={"rid": req.rid,
+                                        "prompt_len": len(req.prompt)})
         self._queue.append(req)
 
     @property
@@ -281,8 +349,24 @@ class ServingEngine:
         self.stats.tokens_out += 1
         if self._sampling_of(req).temperature > 0:
             self.stats.sampled_tokens += 1
+        rec = self.recorder
+        if rec.enabled:
+            # one first_token instant per *admission* (a swap re-admission
+            # emits another, with the re-prefill's stamp — first_token_s
+            # above keeps the original), one slot-occupancy span begin
+            tid = f"slot{slot}"
+            rec.instant("req.first_token", pid=self.pid, tid=tid,
+                        cat="request", wall_s=stamp,
+                        args={"rid": req.rid, "token": token})
+            rec.begin("req.slot", pid=self.pid, tid=tid, cat="request",
+                      wall_s=stamp, args={"rid": req.rid})
         if len(req.generated) >= req.max_new_tokens:
             req.done = True          # prefill token completed the budget
+            if rec.enabled:
+                rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                        cat="request", wall_s=stamp,
+                        args={"rid": req.rid, "reason": "done_at_prefill",
+                              "tokens": len(req.generated)})
             free.append(slot)
             return False
         self._active[slot] = req
@@ -319,6 +403,12 @@ class ServingEngine:
             temps[row] = s.temperature
             top_ks[row] = s.top_k
             slot_ids[row] = slots_for[i]
+        if self.recorder.enabled:
+            self.recorder.begin("engine.prefill", pid=self.pid,
+                                tid="engine", cat="engine",
+                                args={"bucket": bucket, "k": k,
+                                      "k_bucket": kb,
+                                      "rids": [r.rid for r in batch]})
         fn = self._prefill_batch_fn(bucket, kb)
         first, self._cache = fn(self.params, self._cache, jnp.asarray(toks),
                                 jnp.asarray(slot_ids), jnp.asarray(keys),
@@ -326,6 +416,9 @@ class ServingEngine:
         first = jax.device_get(first)
         self.stats.prefill_calls += 1
         stamp = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.end("engine.prefill", pid=self.pid, tid="engine",
+                              cat="engine", wall_s=stamp)
         for i, req in enumerate(batch):
             self._emit_first(req, int(first[pad + i]), stamp, free,
                              slots_for[i])
@@ -337,6 +430,11 @@ class ServingEngine:
         slot = free.pop(0)
         bucket = self._bucket(len(req.prompt))
         self._truncate(req, bucket)
+        if self.recorder.enabled:
+            self.recorder.begin("engine.prefill", pid=self.pid,
+                                tid="engine", cat="engine",
+                                args={"bucket": bucket, "k": 1,
+                                      "rids": [req.rid]})
         toks = np.zeros((1, bucket), np.int32)
         toks[0, bucket - len(req.prompt):] = req.prompt  # left-pad
         cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
@@ -351,6 +449,9 @@ class ServingEngine:
                                                top_k)
         nxt = int(tok)
         stamp = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.end("engine.prefill", pid=self.pid, tid="engine",
+                              cat="engine", wall_s=stamp)
         if not self._emit_first(req, nxt, stamp, free, slot):
             return
         if self.decode_mode == "batched":
@@ -399,6 +500,8 @@ class ServingEngine:
             self.params, self._cache, jnp.asarray(tokens))
         nxt, pos = jax.device_get((nxt, pos))   # one bulk transfer per tick
         emitted = 0
+        rec = self.recorder
+        stamp = time.perf_counter() if rec.enabled else 0.0
         for slot, req in enumerate(self._active):
             if req is None:      # masked slot: decoded, output ignored
                 continue
@@ -406,14 +509,24 @@ class ServingEngine:
             emitted += 1
             if self._sampling_of(req).temperature > 0:
                 self.stats.sampled_tokens += 1
+            if rec.enabled:
+                rec.instant("req.decode", pid=self.pid, tid=f"slot{slot}",
+                            cat="request", wall_s=stamp,
+                            args={"rid": req.rid, "token": int(nxt[slot])})
             if len(req.generated) >= req.max_new_tokens \
                     or int(pos[slot]) >= self.max_seq - 1:
                 req.done = True
                 self._active[slot] = None
+                if rec.enabled:
+                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                            cat="request", wall_s=stamp,
+                            args={"rid": req.rid, "reason": "finished",
+                                  "tokens": len(req.generated)})
         return emitted
 
     def _decode_per_slot(self) -> int:
         emitted = 0
+        rec = self.recorder
         for slot, req in enumerate(self._active):
             if req is None:
                 continue
@@ -425,10 +538,19 @@ class ServingEngine:
             emitted += 1
             if self._sampling_of(req).temperature > 0:
                 self.stats.sampled_tokens += 1
+            if rec.enabled:
+                rec.instant("req.decode", pid=self.pid, tid=f"slot{slot}",
+                            cat="request",
+                            args={"rid": req.rid, "token": int(nxt)})
             if len(req.generated) >= req.max_new_tokens \
                     or int(cache["pos"]) >= self.max_seq - 1:
                 req.done = True
                 self._active[slot] = None
+                if rec.enabled:
+                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                            cat="request",
+                            args={"rid": req.rid, "reason": "finished",
+                                  "tokens": len(req.generated)})
         return emitted
 
     def step(self) -> int:
@@ -437,17 +559,26 @@ class ServingEngine:
         self._admit()
         # time only the decode sweep: prefill/compile costs would otherwise
         # masquerade as decode-step latency in the telemetry channel
+        rec = self.recorder
         t0 = time.perf_counter()
+        if rec.enabled:
+            rec.begin("engine.step", pid=self.pid, tid="engine",
+                      cat="engine", wall_s=t0,
+                      args={"generation": self.generation})
         if self.decode_mode == "batched":
             emitted = self._decode_batched()
         else:
             emitted = self._decode_per_slot()
         self.stats.steps += 1
         self.stats.tokens_out += emitted
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
         self.step_times.append(dt)
-        self._step_ewma = (dt if self._step_ewma is None
-                           else 0.8 * self._step_ewma + 0.2 * dt)
+        self._ewma.update(dt)
+        self._step_hist.observe(dt)
+        if rec.enabled:
+            rec.end("engine.step", pid=self.pid, tid="engine",
+                    cat="engine", wall_s=t1, args={"emitted": emitted})
         if self.on_step is not None:
             self.on_step(dt, emitted, self.generation)
         return emitted
@@ -459,8 +590,10 @@ class ServingEngine:
         event scheduler consults: an engine-backed device's next wake is
         its envelope period *plus* ``steps_per_tick × step_time_ewma_s``,
         so devices whose engines slow down under load automatically tick
-        less often."""
-        return self._step_ewma
+        less often.  A view over the registry's ``engine.step_time_s``
+        EWMA gauge (``alpha=0.2`` reproduces the historical
+        ``0.8·prev + 0.2·dt`` update bit for bit)."""
+        return self._ewma.value
 
     def drain(self, max_steps: int = 10_000) -> None:
         while self.has_work and max_steps:
@@ -479,6 +612,19 @@ class ServingEngine:
         with its consumed-token count, so its resumed stream advances
         deterministically instead of replaying."""
         pending = [r for r in self._active if r is not None]
+        rec = self.recorder
+        if rec.enabled:
+            stamp = time.perf_counter()
+            for slot, r in enumerate(self._active):
+                if r is not None:   # close its occupancy span: the copy
+                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                            cat="request", wall_s=stamp,
+                            args={"rid": r.rid, "reason": "swap_requeue",
+                                  "tokens": len(r.generated)})
+            rec.instant("engine.swap", pid=self.pid, tid="engine",
+                        cat="engine", wall_s=stamp,
+                        args={"generation": self.generation + 1,
+                              "requeued": len(pending)})
         for r in pending:
             r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
                                                             np.int32)])
@@ -486,6 +632,6 @@ class ServingEngine:
                 r, prompt=r_prompt, generated=list(r.generated)))
         self.cfg, self.params, self.opts = cfg, params, opts
         self._active = [None] * self.slots
+        self.generation += 1
         self._programs = self._bind_programs()
         self._reset_caches()
-        self.generation += 1

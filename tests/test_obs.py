@@ -1,0 +1,305 @@
+"""Property suite for the observability layer: one timeline, no drift.
+
+* **Span discipline** — every trace an engine emits is well-nested per
+  ``(pid, tid)`` track and monotone on the wall clock, across both
+  decode modes, random request mixes, and a mid-run ``swap_model``
+  (which force-closes every in-flight slot span with a
+  ``swap_requeue`` reason).  When ``hypothesis`` is installed the same
+  property runs over generated mixes; otherwise a fixed-seed
+  parametrization covers the same space.
+* **Accounting** — one ``req.first_token`` instant per admission, one
+  ``engine.prefill`` span per prefill jit call, and per-rid
+  ``admissions + decode instants == len(generated)`` (so the trace and
+  the token streams can never disagree about throughput).
+* **TTFT bit-equality** — ``request_ttft_s`` equals the legacy
+  ``first_token_s - arrived_s`` subtraction exactly, because the
+  instants carry the very floats the engine stamps on the request.
+* **Views, not copies** — ``ServeStats`` attributes and
+  ``step_time_ewma_s`` read the metrics registry; :class:`EwmaGauge`
+  reproduces the historical ``0.8*prev + 0.2*x`` fold bit-for-bit; P²
+  histogram quantiles track ``np.percentile`` on a heavy-tailed stream.
+* **Fleet timeline** — a placement-enabled fleet run with an
+  engine-backed device and a mid-run ``drop_device`` produces events in
+  all four layers, every one stamped on the simulated clock, monotone
+  per track, exporting to a Chrome trace that ``tools/check_trace.py``
+  accepts; report totals equal the records-derived sums.
+* **Null path** — the default :data:`NULL_RECORDER` records nothing and
+  token streams are bit-identical with tracing on and off.
+"""
+import importlib.util
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.fleet import FleetController, build_fleet, fleet_report
+from repro.models.configs import InputShape
+from repro.models.model import init_params
+from repro.obs import (LAYERS, NULL_RECORDER, EwmaGauge, Histogram,
+                       MetricsRegistry, TraceRecorder, chrome_trace,
+                       instants, request_token_counts, request_ttft_s,
+                       spans, write_trace)
+from repro.serving import CompileCache, Request, ServingEngine
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+CFG = get_config("paper-backbone").with_updates(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=300)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+CC = CompileCache()          # shared: each program compiles exactly once
+
+_ct_spec = importlib.util.spec_from_file_location(
+    "check_trace",
+    Path(__file__).resolve().parents[1] / "tools" / "check_trace.py")
+check_trace = importlib.util.module_from_spec(_ct_spec)
+_ct_spec.loader.exec_module(check_trace)
+
+
+def _prompt(length, rid):
+    rng = np.random.default_rng(101 * length + rid)
+    return rng.integers(0, CFG.vocab_size, size=length).astype(np.int32)
+
+
+def _run_engine(mix, mode, swap=False):
+    """Run a request mix to completion under a TraceRecorder; optionally
+    swap the model after the first step (re-queueing whatever is in
+    flight).  Returns (recorder, engine, requests)."""
+    rec = TraceRecorder()
+    eng = ServingEngine(CFG, PARAMS, slots=2, max_seq=64,
+                        decode_mode=mode, compile_cache=CC,
+                        recorder=rec, pid="dev0")
+    reqs = [Request(rid=i, prompt=_prompt(n, i), max_new_tokens=budget)
+            for i, (n, budget) in enumerate(mix)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    if swap:
+        eng.swap_model(CFG, PARAMS, eng.opts)
+    eng.drain()
+    return rec, eng, reqs
+
+
+def _assert_trace_properties(rec, eng, reqs):
+    # well-nested per track: spans() raises on any mismatched edge
+    all_spans = spans(rec)
+    # wall clock monotone within each (pid, tid) track
+    last = {}
+    for e in rec.events:
+        key = (e.pid, e.tid)
+        assert e.wall_s >= last.get(key, float("-inf")), \
+            f"wall clock went backwards on {key} at {e.name}"
+        last[key] = e.wall_s
+    # standalone engine: no sim clock anywhere
+    assert all(e.sim_s is None for e in rec.events)
+    # accounting: admissions match first-token instants match slot spans,
+    # prefill spans match prefill jit calls, decodes complete the streams
+    counts = request_token_counts(rec)
+    admissions = sum(d["admissions"] for d in counts.values())
+    decodes = sum(d["decodes"] for d in counts.values())
+    assert admissions == eng.stats.prefills
+    assert len(spans(rec, name="req.slot")) == admissions
+    assert len(spans(rec, name="engine.prefill")) == eng.stats.prefill_calls
+    assert admissions + decodes == eng.stats.tokens_out
+    for r in reqs:
+        # a swap re-queues a COPY; the submitted object's stream is
+        # complete only if it finished (the aggregate tokens_out check
+        # above still covers re-queued incarnations)
+        if not r.done or not r.generated:
+            continue
+        d = counts[r.rid]
+        assert d["admissions"] + d["decodes"] == len(r.generated)
+    # TTFT from spans == legacy subtraction, bit for bit
+    span_ttft = request_ttft_s(rec)
+    for r in reqs:
+        if r.first_token_s is None:
+            assert r.rid not in span_ttft
+        else:
+            assert span_ttft[r.rid] == r.first_token_s - r.arrived_s
+    return all_spans
+
+
+FIXED_MIXES = [
+    [(8, 3), (24, 5)],
+    [(1, 1)],
+    [(40, 2), (3, 6), (17, 4)],
+    [(12, 4), (12, 4), (12, 4)],         # same bucket: a burst
+]
+
+
+@pytest.mark.parametrize("mode", ["batched", "per_slot"])
+@pytest.mark.parametrize("swap", [False, True])
+@pytest.mark.parametrize("mix", FIXED_MIXES,
+                         ids=[f"mix{i}" for i in range(len(FIXED_MIXES))])
+def test_trace_properties_fixed(mode, swap, mix):
+    rec, eng, reqs = _run_engine(mix, mode, swap=swap)
+    _assert_trace_properties(rec, eng, reqs)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow,
+                                     HealthCheck.data_too_large])
+    @given(mix=st.lists(st.tuples(st.integers(1, 40), st.integers(1, 6)),
+                        min_size=1, max_size=5),
+           mode=st.sampled_from(["batched", "per_slot"]),
+           swap=st.booleans())
+    def test_trace_properties_hypothesis(mix, mode, swap):
+        rec, eng, reqs = _run_engine(mix, mode, swap=swap)
+        _assert_trace_properties(rec, eng, reqs)
+
+
+@pytest.mark.parametrize("mode", ["batched", "per_slot"])
+def test_swap_requeues_are_second_admissions(mode):
+    # budget outlives the first step, so the swap re-queues the request
+    # and its re-prefill shows up as a second first_token instant while
+    # the interrupted slot span closes with reason=swap_requeue
+    rec, eng, reqs = _run_engine([(8, 6)], mode, swap=True)
+    counts = request_token_counts(rec)
+    assert counts[0]["admissions"] == 2
+    reasons = [s.args.get("reason") for s in spans(rec, name="req.slot")]
+    assert reasons.count("swap_requeue") == 1
+
+
+def test_stats_are_views_over_registry():
+    rec, eng, _ = _run_engine([(8, 3)], "batched")
+    m = eng.metrics
+    assert eng.stats.steps == m.counter("engine.steps").value
+    assert eng.stats.tokens_out == m.counter("engine.tokens_out").value
+    assert eng.stats.prefills == m.counter("engine.prefills").value
+    assert eng.step_time_ewma_s == m.ewma("engine.step_time_s").value
+    assert m.histogram("engine.step_time_hist_s").count == eng.stats.steps
+
+
+def test_ewma_gauge_bit_identical_to_legacy_fold():
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(1e-4, 5e-2, size=200).tolist()
+    g = EwmaGauge("t", alpha=0.2)
+    legacy = None
+    for x in xs:
+        got = g.update(x)
+        legacy = x if legacy is None else 0.8 * legacy + 0.2 * x
+        assert got == legacy          # exact: same float ops, same order
+
+
+def test_p2_histogram_tracks_numpy_percentiles():
+    rng = np.random.default_rng(7)
+    xs = rng.lognormal(mean=-6.0, sigma=0.8, size=4000)
+    h = Histogram("t", quantiles=(0.5, 0.95, 0.99))
+    for x in xs:
+        h.observe(float(x))
+    assert h.count == len(xs)
+    assert h.min == xs.min() and h.max == xs.max()
+    for q in (0.5, 0.95):
+        exact = float(np.percentile(xs, q * 100))
+        assert abs(h.quantile(q) - exact) / exact < 0.15
+    # exact below five samples (nearest-rank fallback)
+    small = Histogram("s", quantiles=(0.5,))
+    for x in (3.0, 1.0, 2.0):
+        small.observe(x)
+    assert small.quantile(0.5) == 2.0
+
+
+def test_registry_name_means_one_thing():
+    m = MetricsRegistry()
+    c = m.counter("a.b")
+    assert m.counter("a.b") is c
+    with pytest.raises(TypeError):
+        m.gauge("a.b")
+    m.ewma("a.e").update(1.0)
+    assert set(m.names()) == {"a.b", "a.e"}
+    snap = m.snapshot()
+    assert snap["a.b"] == 0 and snap["a.e"] == 1.0
+
+
+def test_null_recorder_default_and_stream_equality():
+    def streams(recorder):
+        eng = ServingEngine(CFG, PARAMS, slots=2, max_seq=64,
+                            compile_cache=CC, recorder=recorder)
+        reqs = [Request(rid=i, prompt=_prompt(9 + i, i), max_new_tokens=5)
+                for i in range(3)]
+        for r in reqs:
+            eng.submit(r)
+        eng.drain()
+        return [tuple(r.generated) for r in reqs]
+
+    default_eng = ServingEngine(CFG, PARAMS, slots=2, max_seq=64,
+                                compile_cache=CC)
+    assert default_eng.recorder is NULL_RECORDER
+    rec = TraceRecorder()
+    assert streams(NULL_RECORDER) == streams(rec)
+    assert len(rec.events) > 0
+
+
+def test_exporter_closes_dangling_spans_and_picks_wall_clock():
+    rec = TraceRecorder()
+    rec.begin("outer", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec.instant("tick", pid="p", tid="t", cat="engine", wall_s=2.0)
+    doc = chrome_trace(rec)
+    assert doc["otherData"]["clock"] == "wall"     # no sim clock anywhere
+    ends = [e for e in doc["traceEvents"] if e["ph"] == "E"]
+    assert len(ends) == 1 and ends[0]["args"]["open_at_export"]
+    # synthetic end lands at the track's LAST ts, keeping it monotone
+    assert ends[0]["ts"] == 2.0 * 1e6
+
+
+def _fleet_run(tmp_path):
+    cfg = CFG
+    shape = InputShape("obs_t", 128, 2, "decode")
+    fleet = build_fleet(5, seed=0)
+    rec = TraceRecorder()
+    ctl = FleetController(fleet, cfg, shape, trace_ticks=400,
+                          warmup_ticks=2, placement=True, recorder=rec)
+    engine_dev = next(d for d in fleet if d.tier == "light")
+    eng = ctl.build_engine(engine_dev.device_id, PARAMS, cfg=cfg,
+                           slots=2, max_seq=64, steps_per_tick=2)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=_prompt(6 + i, i),
+                           max_new_tokens=8))
+    ctl.run_for(4.0)
+    dropped = next(d.device_id for d in fleet
+                   if d.device_id != engine_dev.device_id)
+    ctl.drop_device(dropped)
+    ctl.run_for(4.0)
+    eng.drain()                       # close in-flight request spans
+    return rec, ctl, dropped
+
+
+def test_fleet_trace_all_layers_one_sim_timebase(tmp_path):
+    rec, ctl, dropped = _fleet_run(tmp_path)
+    # every layer present, every event on the simulated clock
+    cats = {e.cat for e in rec.events}
+    assert cats == set(LAYERS)
+    assert all(e.sim_s is not None for e in rec.events)
+    # sim clock monotone per (pid, tid) track, spans well-nested
+    last = {}
+    for e in rec.events:
+        key = (e.pid, e.tid)
+        assert e.sim_s >= last.get(key, float("-inf"))
+        last[key] = e.sim_s
+    spans(rec)
+    assert instants(rec, name="fleet.drop_device")
+    assert spans(rec, name="placement.sweep")
+    # the exported trace validates under the CI checker, all layers on
+    doc = chrome_trace(rec)
+    assert doc["otherData"]["clock"] == "sim"
+    path = tmp_path / "fleet_trace.json"
+    write_trace(rec, str(path))
+    assert check_trace.check(path, require_layers=LAYERS) == 0
+    # report totals are registry views that match the raw records
+    rep = fleet_report(ctl)
+    assert rep.total_violations == sum(1 for r in ctl.records if r.violated)
+    assert rep.total_energy_j == pytest.approx(
+        sum(r.observed_energy_j for r in ctl.records))
+    assert ctl.wakes == len(ctl.records)
+    # the placer left an audit trail and each decision also landed in
+    # the trace as a placement.decide instant
+    assert len(ctl.placer.audits) == len(
+        instants(rec, name="placement.decide"))

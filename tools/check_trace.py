@@ -1,0 +1,142 @@
+#!/usr/bin/env python3
+"""Validate an exported Chrome-trace file (``trace.json``).
+
+Checks, in order:
+
+* top-level shape: a ``traceEvents`` list plus ``otherData`` naming the
+  clock the timestamps are on;
+* per-row schema: every event carries ``name``/``ph``/``pid``/``tid``,
+  ``ph`` is one of the phases the recorder emits (``B``/``E``/``i``/
+  ``C``/``M``), and non-metadata rows carry a numeric ``ts``;
+* metadata: every ``pid`` has a ``process_name`` row and every
+  ``(pid, tid)`` lane a ``thread_name`` row — otherwise Perfetto shows
+  bare integers;
+* span discipline: ``B``/``E`` balance per ``(pid, tid)`` track with
+  matching names (the recorder's well-nesting contract), and ``ts`` is
+  non-decreasing within each track;
+* ``--require-layers a,b`` additionally asserts that events of each
+  listed ``cat`` are present (the repo's four layers are ``request``,
+  ``engine``, ``fleet``, ``placement``).
+
+Exits non-zero listing every problem.  No dependencies; CI runs it
+against the trace the bench smoke writes, the same way the docs job
+runs ``check_links.py``.
+
+  PYTHONPATH=src python examples/fleet_demo.py
+  python tools/check_trace.py trace.json --require-layers \\
+      request,engine,fleet,placement
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+PHASES = ("B", "E", "i", "C", "M")
+
+
+def check(path: Path, require_layers=()) -> int:
+    problems = []
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"BAD     {path}: unreadable ({e})")
+        return 1
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        print(f"BAD     {path}: no traceEvents list")
+        return 1
+    if not isinstance(doc.get("otherData", {}).get("clock"), str):
+        problems.append("otherData.clock missing (which timebase is ts on?)")
+
+    named_pids, named_tids = set(), set()
+    seen_pids, seen_tids = set(), set()
+    stacks = {}          # (pid, tid) -> [names of open spans]
+    last_ts = {}         # (pid, tid) -> latest ts
+    cats = set()
+    for i, e in enumerate(events):
+        where = f"event[{i}]"
+        if not isinstance(e, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        ph = e.get("ph")
+        if ph not in PHASES:
+            problems.append(f"{where}: bad ph {ph!r}")
+            continue
+        if not isinstance(e.get("name"), str):
+            problems.append(f"{where}: missing name")
+            continue
+        if "pid" not in e or "tid" not in e:
+            problems.append(f"{where}: missing pid/tid")
+            continue
+        key = (e["pid"], e["tid"])
+        if ph == "M":
+            if e["name"] == "process_name":
+                named_pids.add(e["pid"])
+            elif e["name"] == "thread_name":
+                named_tids.add(key)
+            continue
+        seen_pids.add(e["pid"])
+        seen_tids.add(key)
+        cats.add(e.get("cat"))
+        ts = e.get("ts")
+        if not isinstance(ts, (int, float)):
+            problems.append(f"{where}: {e['name']!r} has no numeric ts")
+            continue
+        if ts < last_ts.get(key, float("-inf")):
+            problems.append(f"{where}: ts goes backwards on track {key} "
+                            f"({e['name']!r}: {ts} < {last_ts[key]})")
+        last_ts[key] = ts
+        if ph == "B":
+            stacks.setdefault(key, []).append(e["name"])
+        elif ph == "E":
+            stack = stacks.setdefault(key, [])
+            if not stack:
+                problems.append(f"{where}: end without begin "
+                                f"({e['name']!r} on track {key})")
+            elif stack[-1] != e["name"]:
+                problems.append(f"{where}: mis-nested on track {key} "
+                                f"(begin {stack[-1]!r} closed by end "
+                                f"{e['name']!r})")
+                stack.pop()
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            problems.append(f"unclosed span(s) on track {key}: {stack}")
+    for pid in seen_pids - named_pids:
+        problems.append(f"pid {pid} has no process_name metadata")
+    for key in seen_tids - named_tids:
+        problems.append(f"track {key} has no thread_name metadata")
+    for layer in require_layers:
+        if layer not in cats:
+            problems.append(f"required layer {layer!r} has no events "
+                            f"(present: {sorted(c for c in cats if c)})")
+
+    for p in problems:
+        print(f"BAD     {path.name}: {p}")
+    n = sum(1 for e in events if isinstance(e, dict) and e.get("ph") != "M")
+    print(f"checked {path.name}: {'FAIL' if problems else 'ok'} "
+          f"({n} events, {len(seen_pids)} processes, "
+          f"{len(seen_tids)} tracks, {len(problems)} problems)")
+    return 1 if problems else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", nargs="+", help="trace.json file(s) to check")
+    ap.add_argument("--require-layers", default="",
+                    help="comma-separated cats that must appear "
+                         "(e.g. request,engine,fleet,placement)")
+    args = ap.parse_args(argv)
+    layers = tuple(s for s in args.require_layers.split(",") if s)
+    rc = 0
+    for t in args.trace:
+        rc |= check(Path(t), require_layers=layers)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
