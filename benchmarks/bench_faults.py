@@ -1,0 +1,266 @@
+"""Self-healing under injected faults: MTTD/MTTR, goodput, token loss.
+
+Three measurements over the placement acceptance fleet (loaded phone +
+two same-site jetson helpers + a WAN server):
+
+1. **fault-free overhead** — the heartbeat detector enabled on a
+   healthy fleet must be *free*: per-wake records and placement logs
+   bit-identical to a detector-off run, and an engine sharing the warm
+   compile cache reports zero recompiles.
+2. **detection/recovery latency** — a deterministic schedule (helper
+   crash + helper freeze) drives the suspect→dead state machine; the
+   exported trace yields MTTD (fault → first ``detector.suspect``) and
+   MTTR (fault → first re-placement after ``fleet.evict``) via
+   :func:`repro.faults.summarize_faults`.
+3. **goodput under chaos** — an engine-backed phone streams requests
+   while the schedule crashes its placed helper, drops helper
+   telemetry and OOMs admissions; tokens generated in the same horizon
+   are compared against a fault-free twin (ratio must clear
+   ``GOODPUT_FLOOR``) and every request must finish with its full
+   budget — ``tokens_lost`` and ``tokens_duplicated`` must both be 0.
+
+Writes ``BENCH_faults.json`` (committed) and, when ``--trace`` is
+given, a Chrome trace of the chaos run for ``tools/check_trace.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.monitor import ResourceContext, constant_trace
+from repro.faults import (CRASH, FREEZE, OOM, TELEMETRY_LOSS, FaultInjector,
+                          FaultSpec, schedule_to_json, summarize_faults)
+from repro.fleet import FleetController, make_device
+from repro.models.configs import InputShape
+from repro.models.model import init_params
+from repro.obs import TraceRecorder, write_trace
+from repro.serving import Request
+
+from .common import emit, header
+
+JSON_PATH = "BENCH_faults.json"
+HORIZON_S, QUICK_HORIZON_S = 30.0, 12.0
+GOODPUT_FLOOR = 0.5            # chaos goodput ≥ this × fault-free
+N_REQS, TOKENS_PER_REQ = 8, 16
+
+LOADED = ResourceContext(cpu_temp_derate=0.45, competing_procs=4,
+                         battery_frac=0.8, mem_free_frac=0.7)
+PHONE_SLA_S = 0.5
+
+# reduced model: real jitted decode steps, cheap enough for a benchmark
+TINY_UPDATES = dict(num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                    head_dim=16, d_ff=128, vocab_size=300)
+
+
+def _fleet():
+    return (make_device("pixel_6_cpu", 0, site="home"),
+            make_device("jetson_agx_orin", 0, site="home"),
+            make_device("jetson_agx_orin", 1, site="home"),
+            make_device("edge_server_a100", 0, site="dc"))
+
+
+def _trace_factory(phone_id):
+    def tf(spec, n):
+        return constant_trace(
+            LOADED if spec.device_id == phone_id else ResourceContext(), n)
+    return tf
+
+
+def _controller(fleet, cfg, shape, *, detection=True, recorder=None,
+                compile_cache=None):
+    kw = {}
+    if recorder is not None:
+        kw["recorder"] = recorder
+    if compile_cache is not None:
+        kw["compile_cache"] = compile_cache
+    ctl = FleetController(
+        list(fleet), cfg, shape, trace_ticks=8000,
+        trace_factory=_trace_factory(fleet[0].device_id),
+        placement=True, allow_offload=False, detection=detection,
+        warmup_ticks=4, recalibrate_every=2, **kw)
+    ctl.set_sla(fleet[0].device_id, PHONE_SLA_S)
+    return ctl
+
+
+def _record_key(r):
+    return (r.device_id, r.tick, r.observed_s, r.predicted_s, r.violated)
+
+
+def _fault_free(cfg, shape, horizon):
+    """Detector-on vs detector-off on a healthy fleet: bit-identical."""
+    runs = {}
+    for detection in (True, False):
+        ctl = _controller(_fleet(), cfg, shape, detection=detection)
+        ctl.run_for(horizon)
+        runs[detection] = ctl
+    a, b = runs[True], runs[False]
+    identical = ([_record_key(r) for r in a.records]
+                 == [_record_key(r) for r in b.records]
+                 and [(t, d.hosts) for t, _, d in a.placement_log]
+                 == [(t, d.hosts) for t, _, d in b.placement_log])
+    return {"records": len(a.records),
+            "placements": len(a.placement_log),
+            "bit_identical": bool(identical),
+            "detector_suspects":
+                int(a.metrics.counter("fleet.detector_suspects").value),
+            "evictions": int(a.metrics.counter("fleet.evictions").value)}
+
+
+def _detection(cfg, shape, horizon):
+    """Crash + freeze a helper each; measure MTTD/MTTR from the trace."""
+    fleet = _fleet()
+    phone = fleet[0].device_id
+    rec = TraceRecorder()
+    ctl = _controller(fleet, cfg, shape, recorder=rec)
+    schedule = [
+        FaultSpec(CRASH, fleet[1].device_id, at_s=0.40 * horizon),
+        FaultSpec(FREEZE, fleet[2].device_id, at_s=0.60 * horizon,
+                  duration_s=0.30 * horizon),
+        FaultSpec(TELEMETRY_LOSS, fleet[3].device_id,
+                  at_s=0.30 * horizon, duration_s=0.20 * horizon,
+                  magnitude=0.7),
+    ]
+    inj = FaultInjector(ctl, schedule).arm()
+    ctl.run_for(horizon)
+    summ = summarize_faults(rec.events)
+    out = dict(summ)                 # outcomes already serialized
+    out["schedule"] = schedule_to_json(schedule)
+    out["applied"] = len(inj.applied)
+    out["skipped"] = len(inj.skipped)
+    out["phone_wakes"] = int(ctl.tick_counts[phone])
+    out["evictions"] = int(ctl.metrics.counter("fleet.evictions").value)
+    out["readmissions"] = \
+        int(ctl.metrics.counter("fleet.readmissions").value)
+    out["degraded_fallbacks"] = \
+        int(ctl.metrics.counter("fleet.degraded_fallbacks").value)
+    return out, rec
+
+
+def _goodput_run(cfg, shape, tiny, params, horizon, *, faulted,
+                 compile_cache=None, recorder=None):
+    fleet = _fleet()
+    phone = fleet[0].device_id
+    ctl = _controller(fleet, cfg, shape, compile_cache=compile_cache,
+                      recorder=recorder)
+    eng = ctl.build_engine(phone, params, cfg=tiny, slots=2, max_seq=96,
+                           steps_per_tick=2)
+    reqs = []
+    for i in range(N_REQS):
+        rng = np.random.default_rng(17 * i + 3)
+        r = Request(rid=i,
+                    prompt=rng.integers(0, tiny.vocab_size,
+                                        size=6 + i % 4).astype(np.int32),
+                    max_new_tokens=TOKENS_PER_REQ)
+        reqs.append(r)
+        eng.submit(r)
+    if faulted:
+        helper = fleet[1].device_id
+        FaultInjector(ctl, [
+            FaultSpec(CRASH, helper, at_s=0.35 * horizon),
+            FaultSpec(TELEMETRY_LOSS, fleet[2].device_id,
+                      at_s=0.30 * horizon, duration_s=0.25 * horizon,
+                      magnitude=0.8),
+            FaultSpec(OOM, phone, at_s=0.25 * horizon, magnitude=2),
+        ]).arm()
+    ctl.run_for(horizon)
+    tokens_at_horizon = int(eng.stats.tokens_out)
+    # drain to settle token-loss accounting: requeued continuations live
+    # in the engine queue (the swap-requeue contract replaces Requests)
+    final = {r.rid: r for r in reqs}
+    final.update({r.rid: r for r in eng._queue})
+    eng.drain()
+    final.update({r.rid: r for r in eng._queue})
+    lost = sum(max(r.max_new_tokens - len(r.generated), 0)
+               for r in final.values())
+    dup = sum(max(len(r.generated) - r.max_new_tokens, 0)
+              for r in final.values())
+    return {"tokens_at_horizon": tokens_at_horizon,
+            "tokens_total": int(eng.stats.tokens_out),
+            "tokens_lost": int(lost),
+            "tokens_duplicated": int(dup),
+            "all_done": bool(all(r.done for r in final.values())),
+            "oom_events": int(eng.stats.oom_events),
+            "requeues": int(eng.stats.requeues),
+            "recompiles": int(eng.stats.recompiles)}, ctl
+
+
+def run(quick: bool = False, json_path: str = JSON_PATH,
+        trace_path: str = "") -> None:
+    header("fault injection + self-healing")
+    cfg = get_config("paper-backbone")
+    shape = InputShape("faults", 256, 4, "prefill")
+    tiny = cfg.with_updates(**TINY_UPDATES)
+    params = init_params(tiny, jax.random.PRNGKey(0))
+    horizon = QUICK_HORIZON_S if quick else HORIZON_S
+    fleet = _fleet()
+    results = {"config": {"quick": quick, "arch": cfg.name,
+                          "devices": [d.device_id for d in fleet],
+                          "horizon_s": horizon,
+                          "goodput_floor": GOODPUT_FLOOR,
+                          "n_requests": N_REQS,
+                          "tokens_per_request": TOKENS_PER_REQ}}
+
+    # ---- 1. fault-free overhead: the detector must be free -------------
+    ff = _fault_free(cfg, shape, horizon)
+    results["fault_free"] = ff
+    emit("faults.fault_free", 0.0,
+         f"bit_identical={int(ff['bit_identical'])};"
+         f"records={ff['records']};suspects={ff['detector_suspects']}")
+
+    # ---- 2. MTTD / MTTR from the trace timeline ------------------------
+    det, _ = _detection(cfg, shape, horizon)
+    results["detection"] = det
+    mttd = det["mean_mttd_s"] or 0.0
+    mttr = det["mean_mttr_s"] or 0.0
+    emit("faults.mttd", mttd * 1e6,
+         f"max_us={(det['max_mttd_s'] or 0)*1e6:.0f};"
+         f"detected={det['detected']}/{det['silent_faults']}")
+    emit("faults.mttr", mttr * 1e6,
+         f"max_us={(det['max_mttr_s'] or 0)*1e6:.0f};"
+         f"evictions={det['evictions']};"
+         f"readmissions={det['readmissions']}")
+
+    # ---- 3. goodput under chaos vs fault-free twin ---------------------
+    base, base_ctl = _goodput_run(cfg, shape, tiny, params, horizon,
+                                  faulted=False)
+    # the chaos twin reuses the warm compile cache: healing costs no jit
+    chaos_rec = TraceRecorder() if trace_path else None
+    chaos, _ = _goodput_run(cfg, shape, tiny, params, horizon,
+                            faulted=True,
+                            compile_cache=base_ctl.compile_cache,
+                            recorder=chaos_rec)
+    if trace_path:
+        # the chaos run is the four-layer showcase: request + engine +
+        # fleet + placement events, with faults/detector/recovery on top
+        write_trace(chaos_rec, trace_path)
+    ratio = (chaos["tokens_at_horizon"]
+             / max(base["tokens_at_horizon"], 1))
+    results["goodput"] = {
+        "baseline": base, "chaos": chaos,
+        "ratio": ratio,
+        "meets_floor": bool(ratio >= GOODPUT_FLOOR),
+    }
+    emit("faults.goodput", 0.0,
+         f"ratio={ratio:.2f};floor={GOODPUT_FLOOR};"
+         f"base_tokens={base['tokens_at_horizon']};"
+         f"chaos_tokens={chaos['tokens_at_horizon']};"
+         f"lost={chaos['tokens_lost']};dup={chaos['tokens_duplicated']};"
+         f"oom={chaos['oom_events']};recompiles={chaos['recompiles']}")
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {json_path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=JSON_PATH)
+    ap.add_argument("--trace", default="",
+                    help="also export the chaos run's Chrome trace here")
+    args = ap.parse_args()
+    run(quick=args.quick, json_path=args.json, trace_path=args.trace)

@@ -74,13 +74,23 @@ def _controller(fleet, cfg, shape, placement: bool) -> FleetController:
     return ctl
 
 
-def _decision_log(placer) -> dict:
-    """Summarize the placer's audit trail for the JSON artifact: every
-    decision with the chains it scored, plus rollup counts (how often
-    hysteresis held the incumbent, how many candidates were
-    DP-infeasible)."""
+# the audit trail grows with the horizon (~190 sweeps × ~8 chains each
+# ballooned the artifact to ~10k lines); keep the interesting edges —
+# the first sweeps (cold placement) and the last (steady state) — and
+# record how many middle entries were dropped
+DECISION_LOG_KEEP = 12
+
+
+def _decision_log(placer, keep: int = DECISION_LOG_KEEP) -> dict:
+    """Summarize the placer's audit trail for the JSON artifact: the
+    first/last ``keep`` decisions with the chains each scored, plus
+    rollup counts over the FULL trail (how often hysteresis held the
+    incumbent, how many candidates were DP-infeasible)."""
+    audits = list(placer.audits)
+    truncated = max(len(audits) - 2 * keep, 0)
+    kept = audits if not truncated else audits[:keep] + audits[-keep:]
     decisions = []
-    for a in placer.audits:
+    for a in kept:
         decisions.append({
             "requester": a.requester,
             "t_s": a.timestamp_s,
@@ -95,10 +105,12 @@ def _decision_log(placer) -> dict:
         })
     return {
         "decisions": decisions,
-        "total": len(decisions),
+        "total": len(audits),
+        "kept": len(kept),
+        "truncated": truncated,
         "held_by_hysteresis": sum(
-            1 for a in placer.audits if a.held_by_hysteresis),
-        "infeasible_total": sum(a.infeasible for a in placer.audits),
+            1 for a in audits if a.held_by_hysteresis),
+        "infeasible_total": sum(a.infeasible for a in audits),
     }
 
 

@@ -13,7 +13,7 @@ import traceback
 
 SUITES = ("overall", "dynamic_budgets", "elastic", "offload", "engine",
           "ablation", "case_study", "tta", "roofline", "fleet", "serving",
-          "placement")
+          "placement", "faults")
 
 
 def main() -> None:

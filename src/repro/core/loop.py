@@ -89,6 +89,13 @@ class AdaptationLoop:
         self.actions = self._base_actions + extra
         self.front = []
 
+    def abandon_current(self) -> None:
+        """Forget the held decision.  Failure-path only: hysteresis
+        re-evaluates the incumbent action each tick, so a decision whose
+        offload chain just died would otherwise survive as "hold" even
+        after its fleet targets were stripped from the action space."""
+        self.current = None
+
     # ------------------------------------------------------- calibration --
     def set_calibration(self, cal: Optional[Calibration]) -> None:
         """Install a telemetry-derived correction into the evaluator and

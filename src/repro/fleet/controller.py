@@ -26,16 +26,20 @@ observed latencies (see ``attach_engine``).
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import random
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.core.actions import Action, OffloadChoice
 from repro.core.loop import AdaptationLoop, Decision
 from repro.core.monitor import ResourceContext
 from repro.core.optimizer import DRIFT_ACCURACY_COST, Budgets
+from repro.faults.detector import (DEAD, SUSPECT, DetectorConfig,
+                                   HeartbeatDetector, Transition)
+from repro.faults.recovery import RetryPolicy, execute_chain
 from repro.models.configs import InputShape, ModelConfig
 from repro.obs import NULL_RECORDER, MetricsRegistry
 from repro.serving import CompileCache
@@ -52,9 +56,12 @@ DEFAULT_SHAPE = InputShape("fleet", 256, 4, "prefill")
 # "lockstep": legacy synchronized stepping, one global tick for everyone
 STEP_MODES = ("event", "lockstep")
 
-# reserved heap id for fleet-wide re-placement wakes ("<" cannot appear
-# in a device_id, which is always "<platform>#<index>")
+# reserved heap ids ("<" cannot appear in a device_id, which is always
+# "<platform>#<index>"): fleet-wide re-placement wakes, failure-detector
+# sweeps, and one-shot scheduled callbacks (fault injection)
 _PLACEMENT_WAKE = "<placement>"
+_DETECTOR_WAKE = "<detector>"
+_CALLBACK_WAKE = "<callback>"
 
 
 @dataclass
@@ -91,6 +98,9 @@ class _DeviceRuntime:
     exhausted: bool = False
     ticks: int = 0                # wakes taken so far
     dropped: bool = False         # left the fleet (drop_device)
+    failed: Optional[str] = None  # active silence fault: "crash"|"freeze"
+    scheduled: bool = False       # has a live heap entry (event mode)
+    penalty_s: float = 0.0        # pending chain-recovery latency penalty
 
 
 class FleetController:
@@ -123,6 +133,9 @@ class FleetController:
                  placement_every_s: Optional[float] = None,
                  placement_drift: float = 0.15,
                  placement_hysteresis: float = 0.15,
+                 detection: bool = True,
+                 detector_config: Optional[DetectorConfig] = None,
+                 retry_policy: Optional[RetryPolicy] = None,
                  recorder=NULL_RECORDER,
                  metrics: Optional[MetricsRegistry] = None,
                  seed: int = 0):
@@ -213,8 +226,7 @@ class FleetController:
         for i, d in enumerate(self._devices.values()):
             # stagger first wakes across each device's own period so the
             # fleet doesn't start phase-locked
-            self._push(d.spec.tick_envelope.nominal_s * i / n,
-                       d.spec.device_id)
+            self._push_device(d, d.spec.tick_envelope.nominal_s * i / n)
         # ---- cross-device placement (the fleet IS the device pool) ----
         self.placement = placement
         self.placer: Optional[FleetPlacer] = None
@@ -236,8 +248,49 @@ class FleetController:
                 # first re-placement after the calibration warmup
                 self._next_place_s = self._warmup_end_s
                 self._push(self._next_place_s, _PLACEMENT_WAKE)
+        # ---- failure detection + recovery (the self-healing plane) ----
+        # Heartbeat detection rides the same min-heap: every device wake
+        # is a beat, a dedicated sweep wake advances the suspect→dead
+        # state machine.  Detector/callback wakes deliberately do NOT
+        # run the telemetry-flush/recalibration block, so a fault-free
+        # run with detection on is bit-identical to one without it.
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
+        self._suspect_counter = self.metrics.counter(
+            "fleet.detector_suspects")
+        self._dead_counter = self.metrics.counter("fleet.detector_deaths")
+        self._evict_counter = self.metrics.counter("fleet.evictions")
+        self._retry_counter = self.metrics.counter("fleet.offload_retries")
+        self._degrade_counter = self.metrics.counter(
+            "fleet.degraded_fallbacks")
+        self._readmit_counter = self.metrics.counter("fleet.readmissions")
+        self._telem_drop_counter = self.metrics.counter(
+            "fleet.telemetry_dropped")
+        self._derate_caps: Dict[str, float] = {}
+        self._telem_faults: Dict[str, object] = {}
+        self._fault_rng = random.Random(seed * 104729 + 7)
+        self._callbacks: Dict[Tuple[float, int], Callable[[], None]] = {}
+        self._detect_period_s = self._min_period_s
+        self.detector: Optional[HeartbeatDetector] = None
+        if detection and step_mode == "event":
+            self.detector = HeartbeatDetector(detector_config)
+            for d in self._devices.values():
+                self.detector.track(d.spec.device_id,
+                                    d.spec.tick_envelope.max_s)
+            self._push(self._detect_period_s, _DETECTOR_WAKE)
 
     # ----------------------------------------------------------- plumbing --
+    def _device(self, device_id: str) -> _DeviceRuntime:
+        """Runtime lookup that fails usefully: an unknown id raises a
+        KeyError naming the fleet's actual members instead of a bare
+        repr (typos in device ids are a debugging tarpit otherwise)."""
+        try:
+            return self._devices[device_id]
+        except KeyError:
+            raise KeyError(
+                f"unknown device_id {device_id!r}; known devices: "
+                f"{sorted(self._devices)}") from None
+
     def _sim_now(self) -> float:
         """The simulated fleet-clock reading trace events are stamped
         with: the event clock under event stepping, the global tick
@@ -267,16 +320,16 @@ class FleetController:
         return {did: d.ticks for did, d in self._devices.items()}
 
     def loop_for(self, device_id: str) -> AdaptationLoop:
-        return self._devices[device_id].loop
+        return self._device(device_id).loop
 
     def sla_for(self, device_id: str) -> float:
-        return self._devices[device_id].sla_s
+        return self._device(device_id).sla_s
 
     def set_sla(self, device_id: str, sla_s: float) -> None:
         """Override a device's latency SLA (e.g. an externally mandated
         budget for an engine-backed device whose real step times live on
         a different scale than the analytic estimate)."""
-        d = self._devices[device_id]
+        d = self._device(device_id)
         d.sla_s = sla_s
         d.loop.budgets = Budgets(latency_s=sla_s,
                                  memory_bytes=d.loop.budgets.memory_bytes)
@@ -290,7 +343,7 @@ class FleetController:
         recorder adopts the fleet's, with this device's id as its trace
         pid — its step/prefill/request spans then land on the device's
         track of the fleet timeline."""
-        d = self._devices[device_id]
+        d = self._device(device_id)
         erec = getattr(engine, "recorder", None)
         if erec is not None and not erec.enabled and self.recorder.enabled:
             engine.recorder = self.recorder
@@ -314,7 +367,7 @@ class FleetController:
         a reduced variant so real decode steps stay cheap."""
         from repro.models.runtime import DEFAULT_OPTIONS
         from repro.serving import DEFAULT_SAMPLING, ServingEngine
-        spec = self._devices[device_id].spec
+        spec = self._device(device_id).spec
         engine = ServingEngine(
             cfg if cfg is not None else self.cfg, params,
             slots=slots, max_seq=max_seq,
@@ -326,6 +379,76 @@ class FleetController:
             recorder=self.recorder, pid=device_id)
         self.attach_engine(device_id, engine, steps_per_tick)
         return engine
+
+    # ---------------------------------------------------------- fault plane --
+    # The surface the FaultInjector drives.  Each call is also usable
+    # directly by tests: the controller doesn't know *why* a device
+    # failed, only that it did.
+    def device_is_up(self, device_id: str) -> bool:
+        """False once the device crashed/froze, dropped, or ran out of
+        trace — i.e. it will not wake again until thawed."""
+        d = self._device(device_id)
+        return not (d.exhausted or d.dropped) and d.failed is None
+
+    def engine_of(self, device_id: str):
+        """The device's attached ServingEngine (None when simulated)."""
+        return self._device(device_id).engine
+
+    def fail_device(self, device_id: str, mode: str = "crash") -> None:
+        """Silence a device without telling anyone: it stops waking (and
+        therefore heartbeating) but — unlike ``drop_device`` — nothing
+        is announced; the detector must discover it.  ``"freeze"`` holds
+        its loop/trace state for a later :meth:`thaw_device`;
+        ``"crash"`` is permanent."""
+        if mode not in ("crash", "freeze"):
+            raise ValueError(f"unknown failure mode {mode!r}; "
+                             f"expected 'crash' or 'freeze'")
+        self._device(device_id).failed = mode
+
+    def thaw_device(self, device_id: str) -> None:
+        """End a freeze: the device wakes immediately and resumes its
+        trace where it stopped.  Its first beat back is a *flap* — the
+        detector quarantines it before the placer may use it again."""
+        d = self._device(device_id)
+        if d.failed is None:
+            return
+        d.failed = None
+        if not d.scheduled and not d.exhausted \
+                and self.step_mode == "event":
+            self._push_device(d, self._now)
+
+    def set_derate_cap(self, device_id: str,
+                       cap: Optional[float]) -> None:
+        """Straggler onset: clamp the device's effective DVFS derate to
+        ``cap`` (< 1 slows its wakes and its raw latency — the fleet
+        sees a device that suddenly runs hot).  ``None`` clears."""
+        self._device(device_id)
+        if cap is None:
+            self._derate_caps.pop(device_id, None)
+        else:
+            self._derate_caps[device_id] = cap
+
+    def set_telemetry_fault(self, device_id: str, fault) -> None:
+        """Attach a :class:`~repro.faults.injector.TelemetryFault` to
+        the device's reporting path (loss/delay/corruption applied at
+        report time).  ``None`` clears."""
+        self._device(device_id)
+        if fault is None:
+            self._telem_faults.pop(device_id, None)
+        else:
+            self._telem_faults[device_id] = fault
+
+    def schedule_at(self, when_s: float,
+                    fn: Callable[[], None]) -> None:
+        """Run ``fn`` when the simulated clock reaches ``when_s`` — the
+        hook fault schedules arm themselves with.  Callback wakes skip
+        the telemetry-flush/recalibration block, so scheduling callbacks
+        never perturbs a fault-free run's calibration stream."""
+        if self.step_mode != "event":
+            raise RuntimeError("schedule_at() requires step_mode='event'")
+        self._seq += 1
+        heapq.heappush(self._heap, (when_s, self._seq, _CALLBACK_WAKE))
+        self._callbacks[(when_s, self._seq)] = fn
 
     # ------------------------------------------------------------ observe --
     def _observe(self, d: _DeviceRuntime, raw_pred_s: float,
@@ -388,14 +511,28 @@ class FleetController:
             return None, None
         d.ticks += 1
         self._wake_counter.inc()
+        cap = self._derate_caps.get(d.spec.device_id)
+        if cap is not None:
+            # straggler fault: DVFS collapse caps the effective derate —
+            # slower wakes, slower raw execution, visible to the placer
+            ctx = dataclasses.replace(
+                ctx, cpu_temp_derate=min(ctx.cpu_temp_derate, cap))
         self._sync_member(d, ctx)
         decision = d.loop.tick(ctx)
+        peers = decision.action.offload.peers
+        if peers and self._chain_lost(peers):
+            decision = self._recover_chain(d, ctx, decision)
         raw = d.loop.evaluator.evaluate(decision.action, ctx,
                                         calibrate=False)
         obs = self._observe(d, raw.latency_s, raw.energy_j)
         if obs is None:
             return None, ctx
         obs_s, obs_j, chan = obs
+        if d.penalty_s > 0.0:
+            # chain recovery happened this wake: the timeouts + backoff
+            # it burned are real observed latency, not a side channel
+            obs_s += d.penalty_s
+            d.penalty_s = 0.0
         if chan == SIMULATED:
             self._observe_accuracy(d, decision, ctx, now_s)
         mrec = MeasurementRecord(
@@ -445,6 +582,54 @@ class FleetController:
         if drift >= self._placement_drift:
             self._schedule_placement(self._now)
 
+    # ---------------------------------------------------- chain recovery ---
+    def _peer_down(self, peer: str) -> bool:
+        """Is this chain hop unusable right now?  Down means failed,
+        dropped, exhausted, unknown, or already evicted from the placer
+        — quarantined members are alive (just not *preferred*), so an
+        existing chain through one keeps working."""
+        d = self._devices.get(peer)
+        if d is None or d.dropped or d.exhausted or d.failed is not None:
+            return True
+        return self.placer is not None and peer not in self.placer.members
+
+    def _chain_lost(self, peers: Tuple[str, ...]) -> bool:
+        return any(self._peer_down(p) for p in peers[1:])
+
+    def _recover_chain(self, d: _DeviceRuntime, ctx: ResourceContext,
+                       decision: Decision) -> Decision:
+        """The decision's offload chain references a dead hop.  Pay the
+        bounded retry/timeout price (:class:`RetryPolicy`), strip the
+        dead fleet target, and re-decide **locally** — the optimizer
+        falls back to the compressed elastic variants already in the
+        action space, so the requester keeps producing instead of
+        stalling until the next placement sweep (which this pulls
+        forward)."""
+        hosts = decision.action.offload.peers
+        hop_s = decision.eval.latency_s / max(len(hosts) - 1, 1)
+        outcome = execute_chain(hosts, hop_s,
+                                alive=lambda p: not self._peer_down(p),
+                                policy=self.retry_policy)
+        self._retry_counter.inc(outcome.retries)
+        self._degrade_counter.inc()
+        d.penalty_s += outcome.penalty_s
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "recovery.retry", pid=d.spec.device_id, tid="recovery",
+                cat="fleet",
+                args={"failed_hop": outcome.failed_hop,
+                      "attempts": outcome.attempts,
+                      "penalty_s": outcome.penalty_s})
+            self.recorder.instant(
+                "recovery.degraded", pid=d.spec.device_id,
+                tid="recovery", cat="fleet",
+                args={"requester": d.spec.device_id,
+                      "lost": outcome.failed_hop, "cause": "chain_loss"})
+        d.loop.set_offload_targets(())
+        d.loop.abandon_current()     # dead chain must not "hold"
+        self._schedule_placement(self._now)
+        return d.loop.tick(ctx)
+
     def _observe_accuracy(self, d: _DeviceRuntime, decision: Decision,
                           ctx: ResourceContext, now_s: float) -> None:
         """Simulate crowd labeling of the decision's task accuracy: the
@@ -471,13 +656,32 @@ class FleetController:
         """Route a measurement toward the store.  Lockstep (or zero
         jitter) delivers immediately; event mode delays each report by a
         deterministic per-(device, tick) latency, so arrival order at the
-        store differs from observation order across devices."""
+        store differs from observation order across devices.  An active
+        :class:`~repro.faults.injector.TelemetryFault` on the device is
+        applied here: reports may be dropped, delayed, or corrupted
+        before the store ever sees them."""
+        tf = self._telem_faults.get(mrec.device_id)
+        extra_delay_s = 0.0
+        if tf is not None:
+            if tf.loss_p > 0.0 and self._fault_rng.random() < tf.loss_p:
+                self._telem_drop_counter.inc()
+                if self.recorder.enabled:
+                    self.recorder.instant(
+                        "telemetry.lost", pid=mrec.device_id,
+                        tid="telemetry", cat="fleet",
+                        args={"tick": mrec.tick})
+                return
+            if tf.corrupt_scale != 1.0:
+                mrec = dataclasses.replace(
+                    mrec, observed_latency_s=(mrec.observed_latency_s
+                                              * tf.corrupt_scale))
+            extra_delay_s = tf.delay_s
         if self.step_mode == "lockstep" or self._jitter_s <= 0:
             self.telemetry.record(mrec)
             return
         frac = ((zlib.crc32(mrec.device_id.encode())
                  + mrec.tick * 2654435761) % 1000) / 1000.0
-        arrival = mrec.timestamp_s + frac * self._jitter_s
+        arrival = mrec.timestamp_s + frac * self._jitter_s + extra_delay_s
         if self.recorder.enabled:
             self.recorder.instant(
                 "telemetry.report", pid=mrec.device_id, tid="telemetry",
@@ -496,6 +700,94 @@ class FleetController:
     def _push(self, when_s: float, device_id: str) -> None:
         self._seq += 1
         heapq.heappush(self._heap, (when_s, self._seq, device_id))
+
+    def _push_device(self, d: _DeviceRuntime, when_s: float) -> None:
+        """Schedule a device wake, tracking that exactly one heap entry
+        is outstanding for it — a thaw must not double-schedule a device
+        whose frozen-era entry hasn't popped yet."""
+        d.scheduled = True
+        self._push(when_s, d.spec.device_id)
+
+    # ----------------------------------------------------- failure detect --
+    def _detector_sweep(self) -> None:
+        """One detector wake: advance every tracked device's
+        suspect→dead state machine on the current clock.  A device
+        reaching DEAD is evicted through the same shared path
+        ``drop_device`` uses — discovery and announcement converge."""
+        rec_on = self.recorder.enabled
+        for edge in self.detector.sweep(self._now):
+            if edge.state == SUSPECT:
+                self._suspect_counter.inc()
+                if rec_on:
+                    self.recorder.instant(
+                        "detector.suspect", pid="fleet", tid="detector",
+                        cat="fleet", args={"device": edge.device_id,
+                                           "silent_s": edge.silent_s})
+            elif edge.state == DEAD:
+                self._dead_counter.inc()
+                if rec_on:
+                    self.recorder.instant(
+                        "detector.dead", pid="fleet", tid="detector",
+                        cat="fleet", args={"device": edge.device_id,
+                                           "silent_s": edge.silent_s})
+                self._evict(edge.device_id, cause="detected")
+
+    def _on_recovered(self, d: _DeviceRuntime,
+                      edge: Transition) -> None:
+        """A suspect/dead device heartbeated again — a flap.  Readmit it
+        (re-register with the placer if it was evicted) but under the
+        detector's quarantine window: the placer will not select it as
+        a helper until the window expires, so a blinking device can't
+        ping-pong placements."""
+        did = d.spec.device_id
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "detector.recovered", pid="fleet", tid="detector",
+                cat="fleet",
+                args={"device": did, "was": edge.was,
+                      "flaps": edge.flaps,
+                      "quarantined_until_s": edge.quarantined_until_s})
+        if self.placer is None:
+            return
+        if did not in self.placer.members:
+            self._readmit_counter.inc()
+            st = self.placer.register(d.spec)
+            st.quarantined_until_s = edge.quarantined_until_s
+            self._schedule_placement(self._now)
+        else:
+            self.placer.member(did).quarantined_until_s = \
+                edge.quarantined_until_s
+
+    def _evict(self, device_id: str, cause: str) -> List[str]:
+        """Shared eviction path (detector discovery and ``drop_device``
+        announcement both land here): remove the member from the placer,
+        degrade every requester whose placement used it back to local
+        (zero stall — their action spaces lose the dead fleet target
+        immediately), and pull the next placement sweep forward.
+        Returns the affected requester ids."""
+        self._evict_counter.inc()
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "fleet.evict", pid="fleet", tid="control", cat="fleet",
+                args={"device": device_id, "cause": cause})
+        if self.placer is None:
+            return []
+        affected = self.placer.remove_member(device_id)
+        for rid in affected:
+            dec = self.placer.current(rid)
+            if rid in self._devices and dec is not None:
+                self._devices[rid].loop.set_offload_targets(())
+                self._devices[rid].loop.abandon_current()
+                self.placement_log.append((self._now, self.wakes, dec))
+                self._degrade_counter.inc()
+                if self.recorder.enabled:
+                    self.recorder.instant(
+                        "recovery.degraded", pid=rid, tid="recovery",
+                        cat="fleet",
+                        args={"requester": rid, "lost": device_id,
+                              "cause": cause})
+        self._schedule_placement(self._now)
+        return affected
 
     # ---------------------------------------------------------- placement --
     def _schedule_placement(self, when_s: float) -> None:
@@ -549,7 +841,7 @@ class FleetController:
                        d.spec.device_id, chan))
             self.placer.update_member(d.spec.device_id, calibration=cal)
         for d in self._devices.values():
-            if d.dropped or d.exhausted:
+            if d.dropped or d.exhausted or d.failed is not None:
                 continue
             did = d.spec.device_id
             prev = self.placer.current(did)
@@ -582,6 +874,7 @@ class FleetController:
         owner started a game — and pull the next re-placement wake
         forward so the fleet reacts within a bounded number of clock
         events."""
+        self._device(device_id)
         if self.placer is None:
             raise RuntimeError("placement is not enabled on this fleet")
         if self.recorder.enabled:
@@ -593,28 +886,23 @@ class FleetController:
         self._schedule_placement(self._now)
 
     def drop_device(self, device_id: str) -> List[str]:
-        """A member leaves the fleet mid-run.  Its loop stops waking;
-        any requester whose placement used it falls back to local-only
-        immediately (the placer rewrites their decisions) and their
-        action spaces lose the dead fleet target.  Returns the affected
-        requester ids."""
-        d = self._devices[device_id]
+        """A member leaves the fleet mid-run — the *announced* caller of
+        the shared eviction path (the failure detector is the
+        *discovered* one).  Its loop stops waking; any requester whose
+        placement used it falls back to local-only immediately (the
+        placer rewrites their decisions) and their action spaces lose
+        the dead fleet target.  Returns the affected requester ids."""
+        d = self._device(device_id)
         d.dropped = True
         d.exhausted = True
+        if self.detector is not None:
+            # announced departures are expected silences, not failures
+            self.detector.untrack(device_id)
         if self.recorder.enabled:
             self.recorder.instant("fleet.drop_device", pid="fleet",
                                   tid="control", cat="fleet",
                                   args={"device": device_id})
-        if self.placer is None:
-            return []
-        affected = self.placer.remove_member(device_id)
-        for rid in affected:
-            dec = self.placer.current(rid)
-            if rid in self._devices and dec is not None:
-                self._devices[rid].loop.set_offload_targets(())
-                self.placement_log.append((self._now, self.wakes, dec))
-        self._schedule_placement(self._now)
-        return affected
+        return self._evict(device_id, cause="announced")
 
     def placement_of(self, device_id: str) -> Optional[PlacementDecision]:
         """The device's current placement decision (None before the
@@ -655,7 +943,23 @@ class FleetController:
         horizon = self._now + duration_s
         out: List[FleetTickRecord] = []
         while self._heap and self._heap[0][0] <= horizon:
-            when, _, did = heapq.heappop(self._heap)
+            when, seq, did = heapq.heappop(self._heap)
+            if did == _DETECTOR_WAKE:
+                # detector/callback wakes advance the clock but skip the
+                # telemetry-flush/recalibration block below — a fault-free
+                # run's calibration points stay bit-identical to a run
+                # without detection
+                self._now = max(self._now, when)
+                self._detector_sweep()
+                self._push(self._now + self._detect_period_s,
+                           _DETECTOR_WAKE)
+                continue
+            if did == _CALLBACK_WAKE:
+                self._now = max(self._now, when)
+                cb = self._callbacks.pop((when, seq), None)
+                if cb is not None:
+                    cb()
+                continue
             self._now = max(self._now, when)
             self._flush_reports(self._now)
             while self._now >= self._next_cal_s:
@@ -665,11 +969,25 @@ class FleetController:
                 self._placement_wake(when)
                 continue
             d = self._devices[did]
+            d.scheduled = False
             if d.exhausted:
                 continue
+            if d.failed is not None:
+                # crashed/frozen: silent — no trace advance, no report,
+                # no heartbeat, no re-push (thaw_device re-pushes)
+                continue
             rec, ctx = self._advance(d, self._now)
-            if not d.exhausted:
-                self._push(self._now + self._next_period(d, ctx), did)
+            if self.detector is not None:
+                edge = self.detector.beat(
+                    did, self._now, period_s=self._next_period(d, ctx))
+                if edge is not None:
+                    self._on_recovered(d, edge)
+            if d.exhausted:
+                if self.detector is not None:
+                    # ran out of trace: an expected silence
+                    self.detector.untrack(did)
+            else:
+                self._push_device(d, self._now + self._next_period(d, ctx))
             if rec is not None:
                 out.append(rec)
         self._now = horizon
@@ -755,7 +1073,7 @@ class FleetController:
                               tid="calibration", cat="fleet")
 
     def calibration_of(self, device_id: str):
-        return self._devices[device_id].loop.evaluator.calibration
+        return self._device(device_id).loop.evaluator.calibration
 
     # ------------------------------------------------------------ queries --
     def probe_loop(self, spec: DeviceSpec,

@@ -134,6 +134,9 @@ class FleetPlacer:
         self.audits: List[PlacementAudit] = []
         self.recorder = NULL_RECORDER
         self.obs_pid = "fleet"
+        # clock of the most recent place() call — candidate_helpers
+        # judges quarantine windows against it
+        self._place_now_s = 0.0
 
     # ------------------------------------------------------- membership ----
     def register(self, spec: DeviceSpec) -> MemberState:
@@ -199,10 +202,18 @@ class FleetPlacer:
                                             link_bw=bw))
         return profs
 
-    def candidate_helpers(self, requester: str) -> List[str]:
+    def candidate_helpers(self, requester: str,
+                          now_s: Optional[float] = None) -> List[str]:
         """Helpers worth considering, best first: same-site before
-        cross-site, then the least busy, then the most capable."""
+        cross-site, then the least busy, then the most capable.
+        Quarantined members (flapping devices on post-recovery
+        probation, see ``MemberState.quarantined_until_s``) are
+        excluded: the placer never ping-pongs onto a helper that just
+        proved unreliable.  ``now_s`` defaults to the clock of the
+        enclosing :meth:`place` call."""
         me = self._members[requester]
+        if now_s is None:
+            now_s = self._place_now_s
 
         def rank(item):
             did, st = item
@@ -212,7 +223,8 @@ class FleetPlacer:
                     -cap)
 
         cands = [(did, st) for did, st in self._members.items()
-                 if did != requester and st.alive]
+                 if did != requester and st.alive
+                 and st.quarantined_until_s <= now_s]
         cands.sort(key=rank)
         return [did for did, _ in cands[:self.considered]]
 
@@ -282,8 +294,9 @@ class FleetPlacer:
         applies hysteresis + migration amortization against the
         incumbent before committing.  Never raises on infeasibility:
         the worst case is an explicit local/infeasible fallback."""
+        self._place_now_s = now_s
         local = self._fallback(requester, LOCAL)
-        helpers = self.candidate_helpers(requester)
+        helpers = self.candidate_helpers(requester, now_s=now_s)
         chains: List[Tuple[str, ...]] = [(requester,)]
         chains += [(requester, h) for h in helpers]
         if self.max_helpers >= 2:

@@ -47,6 +47,10 @@ class MemberState:
     own_load: float = 0.0
     hosted: Dict[str, float] = field(default_factory=dict)
     alive: bool = True
+    # flap hysteresis: until this fleet-clock instant the member is not
+    # offered as a helper for NEW placements (existing chains through it
+    # keep working — it is alive, just on probation after blinking)
+    quarantined_until_s: float = 0.0
 
     def tenant_load(self, excluding: Optional[str] = None) -> float:
         """Compute fraction consumed hosting *other* requesters — the

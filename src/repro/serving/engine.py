@@ -121,7 +121,9 @@ class ServeStats:
                  "prefills": "engine.prefills",
                  "prefill_calls": "engine.prefill_calls",
                  "sampled_tokens": "engine.sampled_tokens",
-                 "recompiles": "engine.recompiles"}
+                 "recompiles": "engine.recompiles",
+                 "oom_events": "engine.oom_events",
+                 "requeues": "engine.requeues"}
 
     def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -146,6 +148,10 @@ class ServeStats:
                               lambda s, v: s._set("sampled_tokens", v))
     recompiles = property(lambda s: s._get("recompiles"),
                           lambda s, v: s._set("recompiles", v))
+    oom_events = property(lambda s: s._get("oom_events"),
+                          lambda s, v: s._set("oom_events", v))
+    requeues = property(lambda s: s._get("requeues"),
+                        lambda s, v: s._set("requeues", v))
 
     @property
     def tokens_per_step(self) -> float:
@@ -233,6 +239,14 @@ class ServingEngine:
         # channel the fleet's TelemetryStore subscribes to.
         self.step_times: Deque[float] = deque(maxlen=2048)
         self.on_step: Optional[Callable[[float, int, int], None]] = None
+        # fault plane: injected OOM failures pending at admission, and
+        # the exponential admission backoff they trigger (in steps).
+        # All zeros on a healthy engine — the admission hot path is
+        # untouched unless a fault is actually injected.
+        self._oom_pending = 0
+        self._admit_holdoff = 0
+        self._oom_backoff = 0
+        self.oom_backoff_cap = 8
 
     # ------------------------------------------------------------ programs --
     def _note_compile(self, what: str, **detail) -> None:
@@ -462,8 +476,36 @@ class ServingEngine:
             cache["sample"] = {"key": key, "temp": temp, "top_k": top_k}
             self._caches[slot] = cache
 
+    def inject_oom(self, n: int = 1) -> None:
+        """Fault injection: the next ``n`` admission attempts fail as if
+        cache allocation OOMed.  The engine responds the way a real
+        admission controller would — the request stays queued (zero
+        token loss) and admission backs off exponentially (doubling
+        hold-off steps, capped at ``oom_backoff_cap``) before retrying,
+        so a memory-pressured engine stops hammering the allocator."""
+        self._oom_pending += max(int(n), 0)
+
     def _admit(self) -> None:
+        if self._admit_holdoff > 0:
+            self._admit_holdoff -= 1
+            return
         free = [s for s in range(self.slots) if self._active[s] is None]
+        if self._oom_pending > 0 and free and self._queue:
+            # injected OOM: this admission attempt fails, the head stays
+            # queued untouched, and we back off before trying again
+            self._oom_pending -= 1
+            self.stats.oom_events += 1
+            self._oom_backoff = min(max(2 * self._oom_backoff, 1),
+                                    self.oom_backoff_cap)
+            self._admit_holdoff = self._oom_backoff
+            if self.recorder.enabled:
+                self.recorder.instant(
+                    "engine.oom", pid=self.pid, tid="engine",
+                    cat="engine",
+                    args={"backoff_steps": self._admit_holdoff,
+                          "queued": len(self._queue)})
+            return
+        admitted = False
         while free and self._queue:
             head = self._queue[0]
             if len(head.generated) >= head.max_new_tokens:
@@ -479,6 +521,9 @@ class ServingEngine:
             else:
                 self._queue.popleft()
                 self._admit_one(head, free)
+            admitted = True
+        if admitted:
+            self._oom_backoff = 0     # a successful admission heals
 
     def _decode_batched(self) -> int:
         if not any(r is not None for r in self._active):
@@ -601,6 +646,34 @@ class ServingEngine:
             max_steps -= 1
 
     # ----------------------------------------------------------- adaptation --
+    def requeue_active(self, reason: str = "requeue") -> int:
+        """Re-queue every in-flight request at the head of the queue
+        with **zero token loss**: the prompt becomes prompt+generated
+        and ``generated`` is preserved, so the re-admitted request's
+        PRNG key (folded with its consumed-token count) advances its
+        stream deterministically instead of replaying.  This is the
+        swap-requeue contract, factored out so failover paths (a device
+        evicted mid-decode, an OOMed admission sweep) reuse it verbatim.
+        Returns the number of requests re-queued."""
+        pending = [r for r in self._active if r is not None]
+        rec = self.recorder
+        if rec.enabled:
+            stamp = time.perf_counter()
+            for slot, r in enumerate(self._active):
+                if r is not None:   # close its occupancy span: the copy
+                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                            cat="request", wall_s=stamp,
+                            args={"rid": r.rid, "reason": reason,
+                                  "tokens": len(r.generated)})
+        for r in pending:
+            r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
+                                                            np.int32)])
+            self._queue.appendleft(dataclasses.replace(
+                r, prompt=r_prompt, generated=list(r.generated)))
+        self._active = [None] * self.slots
+        self.stats.requeues += len(pending)
+        return len(pending)
+
     def swap_model(self, cfg: ModelConfig, params: Params,
                    opts: RuntimeOptions) -> None:
         """Middleware hook: switch the serving variant.  Active requests
@@ -611,27 +684,13 @@ class ServingEngine:
         costs zero compiles.  A re-admitted request's PRNG key is folded
         with its consumed-token count, so its resumed stream advances
         deterministically instead of replaying."""
-        pending = [r for r in self._active if r is not None]
-        rec = self.recorder
-        if rec.enabled:
-            stamp = time.perf_counter()
-            for slot, r in enumerate(self._active):
-                if r is not None:   # close its occupancy span: the copy
-                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
-                            cat="request", wall_s=stamp,
-                            args={"rid": r.rid, "reason": "swap_requeue",
-                                  "tokens": len(r.generated)})
-            rec.instant("engine.swap", pid=self.pid, tid="engine",
-                        cat="engine", wall_s=stamp,
-                        args={"generation": self.generation + 1,
-                              "requeued": len(pending)})
-        for r in pending:
-            r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
-                                                            np.int32)])
-            self._queue.appendleft(dataclasses.replace(
-                r, prompt=r_prompt, generated=list(r.generated)))
+        requeued = self.requeue_active(reason="swap_requeue")
+        if self.recorder.enabled:
+            self.recorder.instant(
+                "engine.swap", pid=self.pid, tid="engine", cat="engine",
+                args={"generation": self.generation + 1,
+                      "requeued": requeued})
         self.cfg, self.params, self.opts = cfg, params, opts
-        self._active = [None] * self.slots
         self.generation += 1
         self._programs = self._bind_programs()
         self._reset_caches()
