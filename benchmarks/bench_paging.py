@@ -1,0 +1,320 @@
+"""Paged KV cache: capacity, shared-prefix admission, live migration.
+
+Four sections, mirroring the ISSUE-8 claims:
+
+* **differential** — paged decode must be bit-identical to the dense
+  batched path at equal throughput order; a second paged engine on the
+  warm compile cache must compile nothing (block tables are runtime
+  data, so occupancy/table contents never enter a jit key).
+* **residency** — at a *fixed* KV memory budget (a fixed block pool),
+  prefix sharing lets the paged engine keep many more same-system-prompt
+  requests resident than the dense layout, which must allocate
+  ``max_seq`` rows per slot up front.
+* **prefix_admission** — time-to-first-token for admitting a prompt the
+  prefix cache already holds (blocks increfed, first token sampled from
+  the cached logits row, ``prefill_calls += 0``) vs a cold admission of
+  the same bucket.
+* **migration** — freeze → thaw onto a compatible engine vs the requeue
+  fallback onto an incompatible one: tokens recovered without
+  re-prefill, destination prefill calls on each path, and a request/
+  engine-layer trace of the hand-off for ``tools/check_trace.py``.
+
+Results go to stdout (the ``name,us_per_call,derived`` CSV contract)
+and ``BENCH_paging.json`` for trend tracking.
+
+  PYTHONPATH=src python -m benchmarks.bench_paging [--quick] [--json PATH]
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.faults import plan_migration
+from repro.models.model import init_params
+from repro.obs import NULL_RECORDER, TraceRecorder, write_trace
+from repro.serving import CompileCache, Request, ServingEngine
+
+from .common import emit, header
+
+CFG = get_config("paper-backbone").with_updates(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512)
+MAX_SEQ = 128
+BLOCK_SIZE = 16
+
+
+def _prompt(length: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, size=length).astype(np.int32)
+
+
+def _requests(n: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=_prompt(int(rng.integers(4, 60)), seed * 97 + i),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _engine(params, cc, **kw):
+    kw.setdefault("slots", 4)
+    kw.setdefault("max_seq", MAX_SEQ)
+    return ServingEngine(CFG, params, compile_cache=cc, **kw)
+
+
+# ------------------------------------------------------------ differential --
+def _differential(params, cc, steps: int):
+    out = {}
+    streams = {}
+    for mode in ("batched", "paged"):
+        eng = _engine(params, cc, decode_mode=mode)
+        reqs = _requests(4, max_new=steps + 8, seed=1)
+        for r in reqs:
+            eng.submit(r)
+        eng.step()
+        eng.step()
+        t0 = time.perf_counter()
+        emitted = 0
+        for _ in range(steps):
+            emitted += eng.step()
+        wall = time.perf_counter() - t0
+        eng.drain()
+        streams[mode] = [tuple(r.generated) for r in reqs]
+        out[mode] = {"tokens_per_s": emitted / wall,
+                     "recompiles": eng.stats.recompiles}
+    # a second paged engine on the warm cache: block tables are runtime
+    # data, so it must find every program already compiled
+    eng2 = _engine(params, cc, decode_mode="paged")
+    reqs = _requests(4, max_new=4, seed=1)
+    for r in reqs:
+        eng2.submit(r)
+    eng2.drain()
+    out["bit_identical"] = streams["batched"] == streams["paged"]
+    out["second_paged_engine_recompiles"] = eng2.stats.recompiles
+    out["paged_over_dense_throughput"] = (
+        out["paged"]["tokens_per_s"]
+        / max(out["batched"]["tokens_per_s"], 1e-12))
+    return out
+
+
+# --------------------------------------------------------------- residency --
+def _residency(params, cc, attempts: int = 12):
+    """Fixed memory: a pool worth two dense slots.  Identical prompts
+    share their prompt blocks, so far more requests stay resident."""
+    bps = MAX_SEQ // BLOCK_SIZE
+    pool_blocks = 2 * bps + 2               # trash + two dense slots' rows
+    dense_resident = (pool_blocks - 1) // bps
+    prompt = _prompt(50, seed=11)           # bucket 64 → 4 prompt blocks
+    eng = _engine(params, cc, decode_mode="paged", slots=attempts,
+                  block_size=BLOCK_SIZE, pool_blocks=pool_blocks)
+    reqs = [Request(rid=i, prompt=prompt.copy(), max_new_tokens=4)
+            for i in range(attempts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                              # burst + prefix-hit admissions
+    pool = eng.block_pool
+    resident = sum(1 for r in reqs if r.generated and not r.done)
+    peak = {"used_blocks": pool.used_blocks,
+            "shared_blocks": pool.shared_blocks}
+    eng.drain()
+    return {
+        "pool_blocks": pool_blocks, "block_size": BLOCK_SIZE,
+        "kv_rows_budget": (pool_blocks - 1) * BLOCK_SIZE,
+        "dense_resident": dense_resident,
+        "paged_resident": resident,
+        "residency_gain": resident / max(dense_resident, 1),
+        **peak,
+        "prefix_sharing_merged": pool.shared_blocks > 0 or resident <= 1,
+    }
+
+
+# -------------------------------------------------------- prefix admission --
+def _prefix_admission(params, cc, rounds: int = 5):
+    """Cold admission (real prefill jit call) vs prefix-cache hit
+    (incref + cached logits row) on the same bucket, warm programs."""
+    # a roomy pool: cached prefixes must survive later admissions
+    # instead of being LRU-evicted for tail blocks
+    eng = _engine(params, cc, decode_mode="paged", slots=1,
+                  pool_blocks=8 * (rounds + 3),
+                  prefix_entries=rounds + 2)
+    warm = Request(rid=1000, prompt=_prompt(40, seed=999), max_new_tokens=1)
+    eng.submit(warm)
+    eng.drain()                             # warm the bucket's programs
+
+    prompts = [_prompt(40, seed=500 + i) for i in range(rounds)]
+    cold_ttft, hit_ttft = [], []
+    for phase, sink in (("cold", cold_ttft), ("hit", hit_ttft)):
+        calls0 = eng.stats.prefill_calls
+        for i, p in enumerate(prompts):
+            r = Request(rid=2000 * (phase == "hit") + i, prompt=p.copy(),
+                        max_new_tokens=1)
+            eng.submit(r)
+            eng.drain()
+            sink.append(r.first_token_s - r.arrived_s)
+        if phase == "cold":
+            cold_calls = eng.stats.prefill_calls - calls0
+        else:
+            hit_calls = eng.stats.prefill_calls - calls0
+    cold_ttft.sort()
+    hit_ttft.sort()
+    return {
+        "rounds": rounds,
+        "cold_p50_ttft_ms": cold_ttft[len(cold_ttft) // 2] * 1e3,
+        "hit_p50_ttft_ms": hit_ttft[len(hit_ttft) // 2] * 1e3,
+        "ttft_speedup": (cold_ttft[len(cold_ttft) // 2]
+                         / max(hit_ttft[len(hit_ttft) // 2], 1e-9)),
+        "cold_prefill_calls": cold_calls,
+        "hit_prefill_calls": hit_calls,     # the prefill-skip claim: 0
+    }
+
+
+# --------------------------------------------------------------- migration --
+def _migration(params, cc, trace_path: str = ""):
+    """Freeze mid-decode and move to a peer: thaw (same weights binding)
+    vs the requeue fallback (fingerprint mismatch)."""
+    def run_src(rec=NULL_RECORDER):
+        src = _engine(params, cc, decode_mode="paged", slots=2,
+                      recorder=rec, pid="src_engine")
+        reqs = _requests(4, max_new=24, seed=5)
+        for r in reqs:
+            src.submit(r)
+        for _ in range(4):
+            src.step()
+        return reqs, src.freeze_all("migrate"), src.drain_waiting()
+
+    # baseline: the same mix, uninterrupted
+    base_eng = _engine(params, cc, decode_mode="paged", slots=2)
+    base = _requests(4, max_new=24, seed=5)
+    for r in base:
+        base_eng.submit(r)
+    base_eng.drain()
+    want = [tuple(r.generated) for r in base]
+
+    rec = TraceRecorder() if trace_path else NULL_RECORDER
+    reqs, frozen, waiting = run_src(rec)
+    frozen_tokens = sum(len(r.generated) for r in frozen)
+    dst = _engine(params, cc, decode_mode="paged", slots=2,
+                  recorder=rec, pid="dst_engine")
+    plan = plan_migration(frozen, dst.can_thaw)
+    for r in frozen:
+        dst.thaw(r)
+    for r in waiting:
+        dst.submit(r)
+    dst.drain()
+    migrate = {
+        "migrated": len(plan.migrated), "fallback": len(plan.fallback),
+        "recovered_tokens": plan.recovered_tokens,
+        "dst_prefill_calls": dst.stats.prefill_calls,
+        "dst_thaws": dst.stats.thaws,
+        "bit_identical": [tuple(r.generated) for r in reqs] == want,
+    }
+    if trace_path:
+        write_trace(rec, trace_path)
+        migrate["trace"] = trace_path
+
+    # the requeue-only alternative: same scenario, incompatible peer
+    reqs2, frozen2, waiting2 = run_src()
+    dst2 = _engine(params, cc, decode_mode="paged", slots=2,
+                   params_version="other-weights")
+    for r in frozen2:
+        dst2.thaw(r)
+    for r in waiting2:
+        dst2.submit(r)
+    dst2.drain()
+    requeue = {
+        "dst_prefill_calls": dst2.stats.prefill_calls,
+        "dst_thaws": dst2.stats.thaws,
+        "reprefilled_tokens": frozen_tokens,    # re-earned through prefill
+        "no_token_loss": all(len(r.generated) == 24 for r in reqs2),
+    }
+    return {"thaw": migrate, "requeue_fallback": requeue,
+            "frozen_tokens_at_handoff": frozen_tokens}
+
+
+def run(quick: bool = False, json_path: str = "BENCH_paging.json",
+        trace_path: str = "BENCH_paging_trace.json") -> None:
+    header("paging: paged KV cache, prefix sharing, freeze/thaw migration")
+    steps = 12 if quick else 48
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    cc = CompileCache()
+    results = {"config": {"quick": quick, "steps": steps, "arch": CFG.name,
+                          "max_seq": MAX_SEQ, "block_size": BLOCK_SIZE,
+                          "backend": jax.default_backend()}}
+
+    diff = _differential(params, cc, steps)
+    results["differential"] = diff
+    emit("paging.decode.paged", 0.0,
+         f"tok_per_s={diff['paged']['tokens_per_s']:.0f}")
+    emit("paging.decode.dense", 0.0,
+         f"tok_per_s={diff['batched']['tokens_per_s']:.0f}")
+    emit("paging.bit_identical", 0.0, str(int(diff["bit_identical"])))
+    emit("paging.second_engine_recompiles", 0.0,
+         str(diff["second_paged_engine_recompiles"]))
+
+    res = _residency(params, cc, attempts=8 if quick else 12)
+    results["residency"] = res
+    emit("paging.residency", 0.0,
+         f"dense={res['dense_resident']};paged={res['paged_resident']};"
+         f"gain=x{res['residency_gain']:.1f};"
+         f"shared_blocks={res['shared_blocks']}")
+
+    adm = _prefix_admission(params, cc, rounds=3 if quick else 5)
+    results["prefix_admission"] = adm
+    emit("paging.admit.cold", adm["cold_p50_ttft_ms"] * 1e3,
+         f"prefill_calls={adm['cold_prefill_calls']}")
+    emit("paging.admit.prefix_hit", adm["hit_p50_ttft_ms"] * 1e3,
+         f"prefill_calls={adm['hit_prefill_calls']};"
+         f"speedup=x{adm['ttft_speedup']:.2f}")
+
+    mig = _migration(params, cc, trace_path=trace_path)
+    results["migration"] = mig
+    emit("paging.migrate.thaw", 0.0,
+         f"migrated={mig['thaw']['migrated']};"
+         f"recovered_tokens={mig['thaw']['recovered_tokens']};"
+         f"dst_prefill_calls={mig['thaw']['dst_prefill_calls']}")
+    emit("paging.migrate.requeue", 0.0,
+         f"dst_prefill_calls={mig['requeue_fallback']['dst_prefill_calls']};"
+         f"reprefilled_tokens={mig['requeue_fallback']['reprefilled_tokens']}")
+
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {json_path}")
+
+    if quick:
+        # CI smoke: structural claims only (throughput magnitudes are
+        # machine-dependent)
+        assert diff["bit_identical"], "paged decode diverged from dense"
+        assert diff["second_paged_engine_recompiles"] == 0, \
+            "block-table shapes leaked into a jit key"
+        assert res["paged_resident"] > res["dense_resident"], \
+            "prefix sharing bought no residency at fixed memory"
+        assert res["shared_blocks"] > 0, "no blocks were actually shared"
+        assert adm["hit_prefill_calls"] == 0, \
+            "prefix-hit admission still called prefill"
+        assert mig["thaw"]["fallback"] == 0, \
+            "compatible thaw fell back to re-prefill"
+        assert mig["thaw"]["bit_identical"], \
+            "migrated streams diverged from the uninterrupted run"
+        assert mig["thaw"]["recovered_tokens"] > 0
+        # only never-admitted requests may prefill on the destination
+        assert mig["thaw"]["dst_prefill_calls"] <= \
+            4 - mig["thaw"]["dst_thaws"], \
+            "a thawed request re-prefilled on the destination"
+        assert mig["requeue_fallback"]["no_token_loss"]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_paging.json")
+    ap.add_argument("--trace", default="BENCH_paging_trace.json",
+                    help="where the migration scenario exports its Chrome "
+                         "trace (validated by tools/check_trace.py)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick, json_path=args.json, trace_path=args.trace)

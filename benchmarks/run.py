@@ -13,7 +13,7 @@ import traceback
 
 SUITES = ("overall", "dynamic_budgets", "elastic", "offload", "engine",
           "ablation", "case_study", "tta", "roofline", "fleet", "serving",
-          "placement", "faults")
+          "placement", "faults", "paging")
 
 
 def main() -> None:

@@ -14,7 +14,8 @@ from .injector import (CRASH, FAULT_KINDS, FREEZE, LINK_DEGRADE,
                        SILENT_KINDS, STRAGGLER, TELEMETRY_CORRUPT,
                        TELEMETRY_DELAY, TELEMETRY_LOSS, FaultInjector,
                        FaultSpec, TelemetryFault, random_schedule)
-from .recovery import ChainOutcome, RetryPolicy, execute_chain
+from .recovery import (ChainOutcome, MigrationOutcome, RetryPolicy,
+                       execute_chain, plan_migration)
 from .report import FaultOutcome, schedule_to_json, summarize_faults
 
 __all__ = [
@@ -25,5 +26,6 @@ __all__ = [
     "OOM", "FAULT_KINDS", "LINK_KINDS", "SILENT_KINDS",
     "FaultSpec", "TelemetryFault", "FaultInjector", "random_schedule",
     "RetryPolicy", "ChainOutcome", "execute_chain",
+    "MigrationOutcome", "plan_migration",
     "FaultOutcome", "summarize_faults", "schedule_to_json",
 ]

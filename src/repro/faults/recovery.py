@@ -18,11 +18,18 @@ notices — it pays a bounded price and degrades:
 :func:`execute_chain` is a pure accounting model of that procedure —
 hosts, liveness oracle and policy in, an auditable
 :class:`ChainOutcome` out — so the retry arithmetic is unit-testable
-without a fleet."""
+without a fleet.
+
+:func:`plan_migration` is the same idea for the paging PR's
+freeze/thaw path: given the frozen requests coming off an evicted
+engine and the destination's compatibility oracle, it splits them into
+zero-re-prefill migrations vs re-prefill fallbacks and totals the
+generated tokens the freeze blobs preserve — auditable before any
+device state moves."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -99,3 +106,39 @@ def execute_chain(hosts: Sequence[str], hop_latency_s: float,
             tried += 1
             retries += 1
     return ChainOutcome(True, attempts, retries, penalty)
+
+
+@dataclass(frozen=True)
+class MigrationOutcome:
+    """What migrating an evicted engine's in-flight work will cost.
+
+    ``migrated`` requests thaw on the destination with zero re-prefill;
+    ``fallback`` requests re-admit through ordinary prefill (their
+    generated suffix folds into the prompt — still zero token loss,
+    but a prefill call).  ``recovered_tokens`` counts the generated
+    tokens the freeze blobs carry across — the tokens a requeue-only
+    recovery would have had to re-earn through re-prefill."""
+    migrated: Tuple[int, ...]
+    fallback: Tuple[int, ...]
+    recovered_tokens: int
+
+    @property
+    def total(self) -> int:
+        return len(self.migrated) + len(self.fallback)
+
+
+def plan_migration(requests: Sequence,
+                   can_thaw: Callable[[object], bool]) -> MigrationOutcome:
+    """Split frozen requests into thaw-able migrations vs re-prefill
+    fallbacks against a destination's compatibility oracle (its
+    ``engine.can_thaw``).  Pure accounting — nothing moves; the fleet
+    controller executes the plan it returns."""
+    migrated, fallback, tokens = [], [], 0
+    for r in requests:
+        frozen = getattr(r, "frozen", None)
+        if frozen is not None and can_thaw(frozen):
+            migrated.append(r.rid)
+        else:
+            fallback.append(r.rid)
+        tokens += len(getattr(r, "generated", ()) or ())
+    return MigrationOutcome(tuple(migrated), tuple(fallback), tokens)

@@ -14,7 +14,13 @@ the rest of the stack exports — no side channel to drift out of sync:
 
 Only *silence* faults (crash/freeze) have a detection story; the other
 kinds degrade service without killing the heartbeat and are scored by
-the benchmark's goodput ratio instead."""
+the benchmark's goodput ratio instead.
+
+Since the paging PR the summary also audits **live migration**: every
+``req.migrate`` instant is folded into a ``migrations`` list, and
+``migrated_reprefills`` counts migrated requests that nevertheless
+showed up in a later ``engine.prefill`` — the zero-re-prefill claim,
+checked against the same trace artifact."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -70,6 +76,8 @@ def summarize_faults(events: Sequence) -> Dict:
     deads: Dict[str, List[float]] = {}
     evicts: Dict[str, List[float]] = {}
     decides: List[float] = []
+    migrates: List[Dict] = []
+    prefills: List = []     # (ts, rids) of every engine.prefill begin
     for e in events:
         args = e.args or {}
         if e.name == "fault.inject":
@@ -82,6 +90,14 @@ def summarize_faults(events: Sequence) -> Dict:
             evicts.setdefault(args.get("device"), []).append(_ts(e))
         elif e.name == "placement.decide":
             decides.append(_ts(e))
+        elif e.name == "req.migrate":
+            migrates.append({"rid": args.get("rid"),
+                             "src": args.get("src"),
+                             "dst": args.get("dst"),
+                             "reprefill": bool(args.get("reprefill")),
+                             "ts_s": _ts(e)})
+        elif e.name == "engine.prefill" and getattr(e, "ph", "B") == "B":
+            prefills.append((_ts(e), args.get("rids") or []))
 
     def first_after(times: Optional[List[float]], t0: float
                     ) -> Optional[float]:
@@ -105,6 +121,15 @@ def summarize_faults(events: Sequence) -> Dict:
             kind, target, t0, suspected_s=sus, dead_s=ded,
             evicted_s=evi, recovered_s=rec if rec is not None else evi))
 
+    # the zero-re-prefill audit: a migrated rid re-entering any
+    # engine.prefill *after* its migration means the thaw fell back
+    reprefilled = 0
+    for m in migrates:
+        hit = any(ts >= m["ts_s"] and m["rid"] in rids
+                  for ts, rids in prefills)
+        m["reprefill"] = m["reprefill"] or hit
+        reprefilled += int(m["reprefill"])
+
     mttds = [o.mttd_s for o in outcomes if o.mttd_s is not None]
     mttrs = [o.mttr_s for o in outcomes if o.mttr_s is not None]
     silent = [o for o in outcomes if o.kind in SILENT_KINDS]
@@ -117,6 +142,9 @@ def summarize_faults(events: Sequence) -> Dict:
         "max_mttd_s": max(mttds) if mttds else None,
         "mean_mttr_s": sum(mttrs) / len(mttrs) if mttrs else None,
         "max_mttr_s": max(mttrs) if mttrs else None,
+        "migrations": migrates,
+        "migrated_requests": len(migrates),
+        "migrated_reprefills": reprefilled,
     }
 
 

@@ -39,7 +39,8 @@ from repro.core.monitor import ResourceContext
 from repro.core.optimizer import DRIFT_ACCURACY_COST, Budgets
 from repro.faults.detector import (DEAD, SUSPECT, DetectorConfig,
                                    HeartbeatDetector, Transition)
-from repro.faults.recovery import RetryPolicy, execute_chain
+from repro.faults.recovery import (RetryPolicy, execute_chain,
+                                   plan_migration)
 from repro.models.configs import InputShape, ModelConfig
 from repro.obs import NULL_RECORDER, MetricsRegistry
 from repro.serving import CompileCache
@@ -264,6 +265,7 @@ class FleetController:
         self._degrade_counter = self.metrics.counter(
             "fleet.degraded_fallbacks")
         self._readmit_counter = self.metrics.counter("fleet.readmissions")
+        self._migration_counter = self.metrics.counter("fleet.migrations")
         self._telem_drop_counter = self.metrics.counter(
             "fleet.telemetry_dropped")
         self._derate_caps: Dict[str, float] = {}
@@ -302,6 +304,12 @@ class FleetController:
         """Re-placement sweeps run (view over ``fleet.placement_events``
         in the metrics registry)."""
         return self._placement_counter.value
+
+    @property
+    def migrations(self) -> int:
+        """Requests live-migrated (frozen on an evicted member, thawed
+        on a peer) so far — view over ``fleet.migrations``."""
+        return self._migration_counter.value
 
     @property
     def devices(self) -> List[DeviceSpec]:
@@ -354,7 +362,11 @@ class FleetController:
     def build_engine(self, device_id: str, params, *, cfg=None, slots: int = 4,
                      max_seq: int = 256, opts=None, steps_per_tick: int = 4,
                      decode_mode: str = "batched",
-                     prefill_mode: str = "batched", sampling=None):
+                     prefill_mode: str = "batched", sampling=None,
+                     block_size: Optional[int] = None,
+                     pool_blocks: Optional[int] = None,
+                     prefix_entries: Optional[int] = None,
+                     params_version: Optional[int] = None):
         """Construct and attach a ServingEngine for a device, wired to the
         fleet's shared compile cache under the device's compile domain —
         same-platform fleet members reuse each other's jitted decode and
@@ -364,10 +376,22 @@ class FleetController:
         across the fleet still shares every compiled program.
 
         ``cfg`` defaults to the fleet's model config; demos and tests pass
-        a reduced variant so real decode steps stay cheap."""
+        a reduced variant so real decode steps stay cheap.  The paging
+        knobs (``block_size``/``pool_blocks``/``prefix_entries``) only
+        matter under ``decode_mode="paged"``; ``params_version`` tags the
+        weights for freeze/thaw compatibility — engines built from the
+        same params object agree by default, so in-flight requests
+        migrate between them with zero re-prefill."""
         from repro.models.runtime import DEFAULT_OPTIONS
         from repro.serving import DEFAULT_SAMPLING, ServingEngine
         spec = self._device(device_id).spec
+        paged_kw = {}
+        if block_size is not None:
+            paged_kw["block_size"] = block_size
+        if pool_blocks is not None:
+            paged_kw["pool_blocks"] = pool_blocks
+        if prefix_entries is not None:
+            paged_kw["prefix_entries"] = prefix_entries
         engine = ServingEngine(
             cfg if cfg is not None else self.cfg, params,
             slots=slots, max_seq=max_seq,
@@ -376,7 +400,8 @@ class FleetController:
             sampling=sampling if sampling is not None else DEFAULT_SAMPLING,
             compile_cache=self.compile_cache,
             compile_domain=spec.compile_domain,
-            recorder=self.recorder, pid=device_id)
+            recorder=self.recorder, pid=device_id,
+            params_version=params_version, **paged_kw)
         self.attach_engine(device_id, engine, steps_per_tick)
         return engine
 
@@ -758,18 +783,82 @@ class FleetController:
             self.placer.member(did).quarantined_until_s = \
                 edge.quarantined_until_s
 
+    def _migration_peer(self, device_id: str) -> Optional[str]:
+        """A live engine-backed fleet member sharing the evicted device's
+        compile domain — frozen KV thaws only where the compiled
+        programs (and therefore the weights binding) can match."""
+        src = self._device(device_id)
+        for did, d in self._devices.items():
+            if did == device_id or d.engine is None:
+                continue
+            if not self.device_is_up(did):
+                continue
+            if d.spec.compile_domain != src.spec.compile_domain:
+                continue
+            return did
+        return None
+
+    def migrate_engine_requests(self, src_id: str,
+                                dst_id: Optional[str] = None) -> int:
+        """Move the source engine's entire in-flight + waiting workload
+        to a same-domain peer: active requests freeze (pages + sampling
+        subtree + consumed count serialized host-side) and thaw on the
+        destination with **zero token loss and zero re-prefill** when
+        the fingerprints match; waiting requests simply re-submit.
+        Returns the number of requests moved (0 when the source has no
+        engine or no live peer exists — in-flight work then requeues
+        locally so nothing is lost either way)."""
+        src = self._device(src_id)
+        eng = src.engine
+        if eng is None or not eng.has_work:
+            return 0
+        if dst_id is None:
+            dst_id = self._migration_peer(src_id)
+        if dst_id is None:
+            eng.requeue_active(reason="evict_requeue")
+            return 0
+        dst = self._device(dst_id).engine
+        moved = eng.freeze_all(reason="migrate")
+        waiting = eng.drain_waiting()
+        plan = plan_migration(moved, dst.can_thaw)
+        rec_on = self.recorder.enabled
+        for r in reversed(moved):
+            ok = dst.thaw(r)
+            if rec_on:
+                self.recorder.instant(
+                    "req.migrate", pid=src_id, tid="migration",
+                    cat="request",
+                    args={"rid": r.rid, "src": src_id, "dst": dst_id,
+                          "reprefill": not ok})
+        for r in waiting:
+            dst.submit(r)
+        n = len(moved) + len(waiting)
+        self._migration_counter.inc(n)
+        if rec_on:
+            self.recorder.instant(
+                "fleet.migrate", pid="fleet", tid="control", cat="fleet",
+                args={"src": src_id, "dst": dst_id, "frozen": len(moved),
+                      "waiting": len(waiting),
+                      "zero_reprefill": list(plan.migrated),
+                      "fallback": list(plan.fallback),
+                      "recovered_tokens": plan.recovered_tokens})
+        return n
+
     def _evict(self, device_id: str, cause: str) -> List[str]:
         """Shared eviction path (detector discovery and ``drop_device``
-        announcement both land here): remove the member from the placer,
-        degrade every requester whose placement used it back to local
-        (zero stall — their action spaces lose the dead fleet target
-        immediately), and pull the next placement sweep forward.
-        Returns the affected requester ids."""
+        announcement both land here): migrate the member's in-flight
+        serving work to a same-domain peer (freeze/thaw — zero token
+        loss, zero re-prefill), remove it from the placer, degrade every
+        requester whose placement used it back to local (zero stall —
+        their action spaces lose the dead fleet target immediately), and
+        pull the next placement sweep forward.  Returns the affected
+        requester ids."""
         self._evict_counter.inc()
         if self.recorder.enabled:
             self.recorder.instant(
                 "fleet.evict", pid="fleet", tid="control", cat="fleet",
                 args={"device": device_id, "cause": cause})
+        self.migrate_engine_requests(device_id)
         if self.placer is None:
             return []
         affected = self.placer.remove_member(device_id)

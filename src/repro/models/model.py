@@ -27,7 +27,10 @@ Cache = Dict[str, Any]
 __all__ = ["init_params", "forward", "lm_loss", "init_cache", "prefill",
            "decode_step", "Cache", "init_slot_cache", "write_cache_slot",
            "greedy_batched_step", "sample_logits", "sample_step",
-           "sample_batched_step", "admit_slot", "batched_prefill_admit"]
+           "sample_batched_step", "admit_slot", "batched_prefill_admit",
+           "init_paged_pool", "init_paged_slot_cache",
+           "paged_sample_batched_step", "paged_prefill_admit",
+           "paged_thaw_write", "paged_copy_block"]
 
 
 def _n_attn_layers(cfg: ModelConfig) -> int:
@@ -252,6 +255,150 @@ def batched_prefill_admit(params: Params, cfg: ModelConfig, stacked: Cache,
         out = admit_slot(out, row, slot_ids[i], new_keys[i], temps[i],
                          top_ks[i])
     return first, out
+
+
+# ============================================================ paged cache ==
+# Block-paged KV: self-attention K/V live in a pool of fixed-size blocks
+# shared by every slot, and each slot carries a host-side block table —
+# a (slots, max_seq // block_size) int32 array of pool indices passed to
+# the jitted step as *runtime data* (constant shape, so occupancy changes
+# never recompile).  The paged step gathers each slot's blocks into a
+# dense (1, max_seq) view and runs the *same* ``sample_step`` computation
+# the dense engine runs: positions beyond ``pos`` read garbage from
+# not-yet-written / trash blocks, but ``decode_attention`` replaces
+# masked scores with NEG_INF, so their contribution is exactly 0 and the
+# paged stream is bit-identical to the dense one.  Only self-attention
+# K/V are paged — SSM/conv state is O(1) per sequence and stays a dense
+# slot leaf, which is why paged mode requires an attention stack.
+
+def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
+                    opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
+    """The device block pool: ``{"k","v"}`` of shape ``(num_blocks,
+    n_attn_layers, block_size, num_kv_heads, head_dim)``.  Block 0 is
+    the trash block (see :mod:`repro.serving.paging`)."""
+    n_attn = _n_attn_layers(cfg)
+    if not n_attn:
+        raise ValueError("paged decode requires an attention stack "
+                         f"(arch_type={cfg.arch_type!r} has no KV cache)")
+    kv_dt = dtype_of(opts.kv_cache_dtype)
+    shape = (num_blocks, n_attn, block_size, cfg.num_kv_heads,
+             cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+
+
+def init_paged_slot_cache(cfg: ModelConfig, slots: int, max_seq: int,
+                          opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
+    """A slot-stacked serving cache *without* the dense ``k``/``v``
+    leaves (those live in the block pool); everything else — ``pos``,
+    the ``"sample"`` subtree, cross-attention KV — stays per-slot."""
+    stacked = init_slot_cache(cfg, slots, max_seq, opts)
+    return {k: v for k, v in stacked.items() if k not in ("k", "v")}
+
+
+def paged_sample_batched_step(params: Params, cfg: ModelConfig,
+                              slot_cache: Cache, pool: Cache,
+                              tokens: jax.Array, tables: jax.Array,
+                              opts: RuntimeOptions = DEFAULT_OPTIONS):
+    """One sampling decode step over paged KV.
+
+    ``tables`` is ``(slots, max_seq // block_size)`` int32.  Per slot:
+    gather its blocks into a dense view, run the exact dense
+    ``sample_step``, slice the newly written KV row back out.  One
+    batched scatter then writes every slot's row into its tail block —
+    active slots always own their tail block (buckets are block-aligned
+    and thawed blocks are private), so no two real writes collide;
+    masked slots write the trash block, whose content is never read
+    unmasked.  Returns ``(next_tokens, positions, new slot cache,
+    new pool)``."""
+    pk, pv = pool["k"], pool["v"]
+    _, n_attn, bs, kvh, hd = pk.shape
+    mb = tables.shape[1]
+
+    def one(c: Cache, tok: jax.Array, tbl: jax.Array):
+        def dense_view(p):
+            g = p[tbl]                          # (mb, n_attn, bs, kvh, hd)
+            return jnp.moveaxis(g, 0, 1).reshape(n_attn, 1, mb * bs, kvh, hd)
+
+        dense = dict(c)
+        dense["k"], dense["v"] = dense_view(pk), dense_view(pv)
+        wpos = c["pos"]                         # this step writes row wpos
+        nxt, c2 = sample_step(params, cfg, dense, tok, opts)
+        row_k = jax.lax.dynamic_slice_in_dim(c2["k"], wpos, 1, axis=2)
+        row_v = jax.lax.dynamic_slice_in_dim(c2["v"], wpos, 1, axis=2)
+        slot_side = {k: v for k, v in c2.items() if k not in ("k", "v")}
+        blk = tbl[wpos // bs]
+        return (nxt, c2["pos"], slot_side, row_k[:, 0, 0], row_v[:, 0, 0],
+                blk, wpos % bs)
+
+    nxt, pos, new_cache, rk, rv, blks, offs = jax.vmap(one)(
+        slot_cache, tokens, tables)
+    new_pool = {"k": pk.at[blks, :, offs].set(rk.astype(pk.dtype)),
+                "v": pv.at[blks, :, offs].set(rv.astype(pv.dtype))}
+    return nxt, pos, new_cache, new_pool
+
+
+def paged_prefill_admit(params: Params, cfg: ModelConfig, slot_cache: Cache,
+                        pool: Cache, tokens: jax.Array, slot_ids: jax.Array,
+                        keys: jax.Array, temps: jax.Array,
+                        top_ks: jax.Array, dest_blocks: jax.Array,
+                        opts: RuntimeOptions):
+    """Burst admission into the paged cache: prefill ``(k, bucket)``
+    left-padded prompts in ONE call, scatter each row's KV into its
+    destination pool blocks and its non-KV leaves + sampling state into
+    its slot.  ``dest_blocks`` is ``(k, bucket // block_size)`` int32 —
+    padding rows target the trash block.  Returns ``((k,) first tokens,
+    (k, vocab) last-position logits, new slot cache, new pool)``; the
+    logits rows let the caller cache the prefill for prefix reuse."""
+    k, bucket = tokens.shape
+    _, n_attn, bs, kvh, hd = pool["k"].shape
+    nblk = bucket // bs
+    cache = init_cache(cfg, k, bucket, opts)
+    logits, cache = prefill(params, cfg, tokens, cache, opts)
+    last = logits[:, -1]
+    first, new_keys = jax.vmap(
+        lambda lg, ky, t, tk: sample_logits(lg, ky, t, tk, cfg.vocab_size)
+    )(last, keys, temps, top_ks)
+
+    def blockify(a):                     # (n_attn, k, bucket, kvh, hd)
+        a = jnp.moveaxis(a, 0, 1).reshape(k, n_attn, nblk, bs, kvh, hd)
+        return jnp.moveaxis(a, 2, 1).reshape(k * nblk, n_attn, bs, kvh, hd)
+
+    flat = dest_blocks.reshape(-1)
+    new_pool = {
+        "k": pool["k"].at[flat].set(blockify(cache["k"])
+                                    .astype(pool["k"].dtype)),
+        "v": pool["v"].at[flat].set(blockify(cache["v"])
+                                    .astype(pool["v"].dtype))}
+    out = slot_cache
+    model_side = {key: v for key, v in slot_cache.items() if key != "sample"}
+    row_src = {key: v for key, v in cache.items() if key not in ("k", "v")}
+    for i in range(k):
+        row = jax.tree_util.tree_map(
+            lambda a, i=i: a if a.ndim == 0 else
+            jax.lax.slice_in_dim(a, i, i + 1, axis=1), row_src)
+        row = jax.tree_util.tree_map(
+            lambda s, c: c if c.ndim == 0 else jnp.pad(
+                c, [(0, t - n) for t, n in zip(s.shape[1:], c.shape)]),
+            model_side, row)
+        out = admit_slot(out, row, slot_ids[i], new_keys[i], temps[i],
+                         top_ks[i])
+    return first, last, out, new_pool
+
+
+def paged_thaw_write(pool: Cache, rows_k: jax.Array, rows_v: jax.Array,
+                     ids: jax.Array) -> Cache:
+    """Scatter a thawed request's densified KV back into pool blocks.
+    ``rows_k``/``rows_v``: ``(nblk, n_attn, block_size, kvh, hd)``;
+    ``ids``: ``(nblk,)`` freshly allocated (private) block indices."""
+    return {"k": pool["k"].at[ids].set(rows_k.astype(pool["k"].dtype)),
+            "v": pool["v"].at[ids].set(rows_v.astype(pool["v"].dtype))}
+
+
+def paged_copy_block(pool: Cache, src: jax.Array, dst: jax.Array) -> Cache:
+    """Copy-on-write: duplicate block ``src`` into ``dst`` (both traced,
+    one program covers every pair)."""
+    return {"k": pool["k"].at[dst].set(pool["k"][src]),
+            "v": pool["v"].at[dst].set(pool["v"][src])}
 
 
 # =========================================================== decode blocks ==

@@ -15,12 +15,27 @@ and sampling never enters the key — with :data:`GLOBAL_COMPILE_CACHE` as
 the process-wide default.  :class:`ServeStats` counts steps/tokens/
 prefills/prefill-calls/sampled-tokens/recompiles, and the engine's
 ``step_time_ewma_s`` / ``on_step`` hooks are the measured back-end feed
-the fleet's telemetry and event scheduler consume."""
+the fleet's telemetry and event scheduler consume.
+
+``decode_mode="paged"`` swaps the dense per-slot ``max_seq`` KV
+allocation for a :class:`BlockPool` of fixed-size blocks with
+refcounted copy-on-write prefix sharing (:mod:`repro.serving.paging`),
+and every engine mode gains ``freeze``/``thaw``: a request's pages,
+sampling subtree and consumed count serialize into a host-side
+:class:`FrozenRequest` that resumes on any engine with a matching
+``(cfg, opts, params_version)`` fingerprint — zero token loss, zero
+re-prefill — which is the fleet's live-migration primitive."""
 from .compile_cache import (CompileCache, GLOBAL_COMPILE_CACHE,
                             ServePrograms)
-from .engine import Request, ServeStats, ServingEngine
+from .engine import DECODE_MODES, Request, ServeStats, ServingEngine
+from .paging import (DEFAULT_BLOCK_SIZE, BlockPool, FrozenRequest,
+                     PrefixCache, PrefixEntry, block_hash_chain,
+                     blocks_needed)
 from .sampling import DEFAULT_SAMPLING, SamplingOpts, request_key
 
 __all__ = ["CompileCache", "GLOBAL_COMPILE_CACHE", "ServePrograms",
-           "Request", "ServeStats", "ServingEngine",
-           "SamplingOpts", "DEFAULT_SAMPLING", "request_key"]
+           "Request", "ServeStats", "ServingEngine", "DECODE_MODES",
+           "SamplingOpts", "DEFAULT_SAMPLING", "request_key",
+           "DEFAULT_BLOCK_SIZE", "BlockPool", "FrozenRequest",
+           "PrefixCache", "PrefixEntry", "block_hash_chain",
+           "blocks_needed"]

@@ -43,6 +43,23 @@ Program set per key:
                      scatter every row into its slot; keyed on the
                      k-bucket so mixed burst sizes reuse a handful of
                      programs instead of recompiling per shape
+
+Paged-mode programs (``decode_mode="paged"``) are lazy dicts keyed on
+the pool geometry ``(num_blocks, block_size)`` — block *tables* are
+runtime int32 arrays of constant shape, so occupancy, sharing and
+admission churn never recompile and the outer cache key stays
+``(cfg, opts, slots, max_seq, domain)``:
+
+* ``paged_decode(nb, bs)`` — one batched sampling step gathering each
+                     slot's blocks into a dense view (slot cache + pool
+                     donated); bit-identical to ``decode``
+* ``paged_prefill_batch(bucket, k, nb, bs)`` — burst admission that
+                     scatters prefilled KV into destination blocks
+* ``paged_admit``   — writes non-KV leaves + sampling state into one
+                     slot of the paged slot cache (thaw / prefix reuse)
+* ``thaw_scatter(nblk, nb, bs)`` — writes a thawed request's densified
+                     KV back into freshly allocated blocks
+* ``copy_block(nb, bs)`` — copy-on-write block duplication
 """
 from __future__ import annotations
 
@@ -52,8 +69,10 @@ import jax
 
 from repro.models.configs import ModelConfig
 from repro.models.model import (admit_slot, batched_prefill_admit,
-                                decode_step, greedy_batched_step, prefill,
-                                sample_batched_step, sample_logits,
+                                decode_step, greedy_batched_step,
+                                paged_copy_block, paged_prefill_admit,
+                                paged_sample_batched_step, paged_thaw_write,
+                                prefill, sample_batched_step, sample_logits,
                                 sample_step)
 from repro.models.runtime import RuntimeOptions
 
@@ -89,6 +108,12 @@ class ServePrograms:
             donate_argnums=(0,))
         self._prefills: Dict[int, Callable] = {}
         self._prefill_batches: Dict[Tuple[int, int], Callable] = {}
+        self._paged_decodes: Dict[Tuple[int, int], Callable] = {}
+        self._paged_prefill_batches: Dict[Tuple[int, int, int, int],
+                                          Callable] = {}
+        self._paged_admit: Dict[str, Callable] = {}
+        self._thaw_scatters: Dict[Tuple[int, int, int], Callable] = {}
+        self._copy_blocks: Dict[Tuple[int, int], Callable] = {}
 
     def prefill(self, bucket: int) -> Tuple[Callable, bool]:
         """The batch=1 prefill jit for one prompt bucket, plus whether this
@@ -114,6 +139,73 @@ class ServePrograms:
                     p, cfg, st, t, s, ky, tp, tk, opts, max_seq),
                 donate_argnums=(1,))
         return self._prefill_batches[(bucket, k)], fresh
+
+    # --------------------------------------------------- paged programs --
+    def paged_decode(self, num_blocks: int,
+                     block_size: int) -> Tuple[Callable, bool]:
+        """The batched paged sampling step for one pool geometry.  Slot
+        cache and pool are donated; block tables ride in as runtime
+        data, so every occupancy shares this one program."""
+        key = (num_blocks, block_size)
+        fresh = key not in self._paged_decodes
+        if fresh:
+            cfg, opts = self._cfg, self._opts
+            self._paged_decodes[key] = jax.jit(
+                lambda p, c, pl, t, tb: paged_sample_batched_step(
+                    p, cfg, c, pl, t, tb, opts),
+                donate_argnums=(1, 2))
+        return self._paged_decodes[key], fresh
+
+    def paged_prefill_batch(self, bucket: int, k: int, num_blocks: int,
+                            block_size: int) -> Tuple[Callable, bool]:
+        """Burst admission into the paged cache for ``(prompt bucket,
+        k-bucket)``: KV rows scatter into destination blocks, non-KV
+        leaves + sampling into slots (slot cache and pool donated)."""
+        key = (bucket, k, num_blocks, block_size)
+        fresh = key not in self._paged_prefill_batches
+        if fresh:
+            cfg, opts = self._cfg, self._opts
+            self._paged_prefill_batches[key] = jax.jit(
+                lambda p, st, pl, t, s, ky, tp, tk, db: paged_prefill_admit(
+                    p, cfg, st, pl, t, s, ky, tp, tk, db, opts),
+                donate_argnums=(1, 2))
+        return self._paged_prefill_batches[key], fresh
+
+    def paged_admit(self) -> Tuple[Callable, bool]:
+        """``admit_slot`` over the paged (KV-less) slot cache: writes one
+        request's non-KV leaves plus sampling state (thaw and
+        prefix-reuse admissions; stacked side donated)."""
+        fresh = "admit" not in self._paged_admit
+        if fresh:
+            self._paged_admit["admit"] = jax.jit(
+                lambda st, c, i, k, t, tk: admit_slot(st, c, i, k, t, tk),
+                donate_argnums=(0,))
+        return self._paged_admit["admit"], fresh
+
+    def thaw_scatter(self, nblk: int, num_blocks: int,
+                     block_size: int) -> Tuple[Callable, bool]:
+        """Writes ``nblk`` densified thawed KV blocks into the (donated)
+        pool; keyed on the block count so thaws of similar depth share
+        programs (callers bucket ``nblk`` via the prompt buckets)."""
+        key = (nblk, num_blocks, block_size)
+        fresh = key not in self._thaw_scatters
+        if fresh:
+            self._thaw_scatters[key] = jax.jit(
+                lambda pl, rk, rv, ids: paged_thaw_write(pl, rk, rv, ids),
+                donate_argnums=(0,))
+        return self._thaw_scatters[key], fresh
+
+    def copy_block(self, num_blocks: int,
+                   block_size: int) -> Tuple[Callable, bool]:
+        """Copy-on-write block duplication (src/dst traced; pool
+        donated) — one program per pool geometry."""
+        key = (num_blocks, block_size)
+        fresh = key not in self._copy_blocks
+        if fresh:
+            self._copy_blocks[key] = jax.jit(
+                lambda pl, s, d: paged_copy_block(pl, s, d),
+                donate_argnums=(0,))
+        return self._copy_blocks[key], fresh
 
 
 class CompileCache:

@@ -22,6 +22,24 @@ Two decode paths share the scheduler:
 * ``decode_mode="per_slot"`` — the original reference loop: one jit call
   and one host sync per active slot.  Kept for equivalence tests and as
   the benchmark baseline; token streams are bit-identical across modes.
+* ``decode_mode="paged"`` — the slot-stacked step, but self-attention
+  KV lives in a :class:`~repro.serving.paging.BlockPool` of fixed-size
+  blocks instead of a dense ``max_seq`` row per slot.  Host-side block
+  tables ride into the jitted step as runtime data (constant shape —
+  occupancy, sharing and admission churn never recompile), prompt
+  blocks are deduplicated by prefix chain hash (same-system-prompt
+  admissions share prefill blocks, copy-on-write), and a full-prompt
+  prefix cache re-admits an already-seen padded prompt without any
+  prefill jit call.  Token streams are bit-identical to ``"batched"``.
+
+Any non-``per_slot`` engine can **freeze** an in-flight request into a
+host-side :class:`~repro.serving.paging.FrozenRequest` blob (pages
+densified + trimmed to ``pos``, sampling subtree, consumed count) and
+**thaw** it later — on itself or on a fleet peer whose ``(cfg, opts,
+params_version)`` fingerprint matches — with zero token loss and zero
+re-prefill.  ``requeue_active`` and ``swap_model`` route through
+freeze/thaw, so a same-weights swap no longer re-prefills; a
+fingerprint mismatch falls back to the legacy requeue-with-re-prefill.
 
 Admission is batched too (``prefill_mode="batched"``, the default on the
 batched decode path): ``_admit`` drains every waiting request that shares
@@ -44,7 +62,6 @@ heterogeneous per-slot policies still share every program.
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
 import time
 from collections import deque
@@ -57,14 +74,23 @@ import numpy as np
 
 from repro.models.configs import ModelConfig
 from repro.models.layers import Params
-from repro.models.model import init_cache, init_slot_cache
+from repro.models.model import (init_cache, init_paged_pool,
+                                init_paged_slot_cache, init_slot_cache)
 from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
 from repro.obs import NULL_RECORDER, MetricsRegistry
 
 from .compile_cache import GLOBAL_COMPILE_CACHE, CompileCache, ServePrograms
+from .paging import (DEFAULT_BLOCK_SIZE, TRASH_BLOCK, BlockPool,
+                     FrozenRequest, PrefixCache, PrefixEntry,
+                     block_hash_chain, blocks_needed)
 from .sampling import DEFAULT_SAMPLING, SamplingOpts, request_key
 
+DECODE_MODES = ("batched", "per_slot", "paged")
 PREFILL_MODES = ("batched", "per_request")
+
+# cache leaves whose sequence axis (axis 2 in batch=1 layout) is trimmed
+# to ``pos`` when freezing — everything past pos is zero by construction
+_SEQ_TRIM_LEAVES = ("k", "v", "shared_k", "shared_v")
 
 # default observability pids: distinct per engine so two untagged
 # engines sharing one TraceRecorder never interleave on one track
@@ -96,6 +122,11 @@ class Request:
     done: bool = False
     first_token_s: Optional[float] = None
     finished_s: Optional[float] = None
+    # set when the request carries serialized in-flight state (a requeue,
+    # preemption or migration); a compatible engine thaws it with zero
+    # re-prefill, an incompatible one falls back to re-prefilling
+    # prompt+generated (the legacy requeue contract)
+    frozen: Optional[FrozenRequest] = None
 
 
 class ServeStats:
@@ -123,7 +154,9 @@ class ServeStats:
                  "sampled_tokens": "engine.sampled_tokens",
                  "recompiles": "engine.recompiles",
                  "oom_events": "engine.oom_events",
-                 "requeues": "engine.requeues"}
+                 "requeues": "engine.requeues",
+                 "freezes": "engine.freezes",
+                 "thaws": "engine.thaws"}
 
     def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -152,6 +185,10 @@ class ServeStats:
                           lambda s, v: s._set("oom_events", v))
     requeues = property(lambda s: s._get("requeues"),
                         lambda s, v: s._set("requeues", v))
+    freezes = property(lambda s: s._get("freezes"),
+                       lambda s, v: s._set("freezes", v))
+    thaws = property(lambda s: s._get("thaws"),
+                     lambda s, v: s._set("thaws", v))
 
     @property
     def tokens_per_step(self) -> float:
@@ -196,22 +233,62 @@ class ServingEngine:
                  compile_domain: str = "",
                  recorder=NULL_RECORDER,
                  pid: Optional[str] = None,
-                 metrics: Optional[MetricsRegistry] = None):
-        if decode_mode not in ("batched", "per_slot"):
-            raise ValueError(f"unknown decode_mode {decode_mode!r}")
+                 metrics: Optional[MetricsRegistry] = None,
+                 block_size: int = DEFAULT_BLOCK_SIZE,
+                 pool_blocks: Optional[int] = None,
+                 prefix_entries: int = 32,
+                 params_version: Optional[int] = None):
+        if decode_mode not in DECODE_MODES:
+            raise ValueError(f"unknown decode_mode {decode_mode!r}; "
+                             f"expected one of {DECODE_MODES}")
         if prefill_mode not in PREFILL_MODES:
             raise ValueError(f"unknown prefill_mode {prefill_mode!r}; "
                              f"expected one of {PREFILL_MODES}")
+        if decode_mode == "paged":
+            # every prompt bucket (powers of two from 16, capped at
+            # max_seq) must be block-aligned so prompts fill whole blocks
+            # and decode always writes a private tail block
+            if block_size < 1 or block_size & (block_size - 1) \
+                    or block_size > 16:
+                raise ValueError(f"block_size {block_size} must be a "
+                                 "power of two <= 16")
+            if max_seq % block_size:
+                raise ValueError(f"block_size {block_size} must divide "
+                                 f"max_seq {max_seq}")
+            per_slot_blocks = max_seq // block_size
+            if pool_blocks is None:
+                # dense-equivalent capacity plus the trash block; prefix
+                # sharing only ever *reduces* usage below this
+                pool_blocks = slots * per_slot_blocks + 1
+            if pool_blocks < per_slot_blocks + 1:
+                raise ValueError(f"pool_blocks {pool_blocks} cannot hold "
+                                 "one full-length request (need "
+                                 f"{per_slot_blocks + 1})")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_seq = max_seq
         self.opts = opts
         self.decode_mode = decode_mode
+        self.block_size = block_size
+        self.pool_blocks = pool_blocks
+        self.prefix_entries = prefix_entries
+        # the freeze/thaw compatibility fingerprint: thawing serialized KV
+        # against different weights would silently resume a stale stream,
+        # so blobs carry (cfg, opts, params_version) and only thaw when
+        # all three match.  Engines sharing a params pytree share its id;
+        # callers juggling transient params should pass one explicitly.
+        self.params_version = (params_version if params_version is not None
+                               else id(params))
         # the per-slot reference loop has no stacked cache to scatter a
-        # burst into — it always admits per request
-        self.prefill_mode = ("per_request" if decode_mode == "per_slot"
-                             else prefill_mode)
+        # burst into — it always admits per request; the paged path only
+        # has burst admission (its per-request path is the k=1 burst)
+        if decode_mode == "per_slot":
+            self.prefill_mode = "per_request"
+        elif decode_mode == "paged":
+            self.prefill_mode = "batched"
+        else:
+            self.prefill_mode = prefill_mode
         self.sampling = sampling
         self.compile_cache = (compile_cache if compile_cache is not None
                               else GLOBAL_COMPILE_CACHE)
@@ -276,13 +353,76 @@ class ServingEngine:
             self._note_compile("prefill_batch", bucket=bucket, k=k)
         return fn
 
+    def _paged_decode_fn(self) -> Callable:
+        fn, fresh = self._programs.paged_decode(self.pool_blocks,
+                                                self.block_size)
+        if fresh:
+            self._note_compile("paged_decode", pool_blocks=self.pool_blocks,
+                               block_size=self.block_size)
+        return fn
+
+    def _paged_prefill_fn(self, bucket: int, k: int) -> Callable:
+        fn, fresh = self._programs.paged_prefill_batch(
+            bucket, k, self.pool_blocks, self.block_size)
+        if fresh:
+            self._note_compile("paged_prefill_batch", bucket=bucket, k=k)
+        return fn
+
+    def _paged_admit_fn(self) -> Callable:
+        fn, fresh = self._programs.paged_admit()
+        if fresh:
+            self._note_compile("paged_admit")
+        return fn
+
+    def _thaw_scatter_fn(self, nblk: int) -> Callable:
+        fn, fresh = self._programs.thaw_scatter(nblk, self.pool_blocks,
+                                                self.block_size)
+        if fresh:
+            self._note_compile("thaw_scatter", nblk=nblk)
+        return fn
+
+    def _copy_block_fn(self) -> Callable:
+        fn, fresh = self._programs.copy_block(self.pool_blocks,
+                                              self.block_size)
+        if fresh:
+            self._note_compile("copy_block")
+        return fn
+
     def _reset_caches(self) -> None:
         if self.decode_mode == "batched":
             self._cache = init_slot_cache(self.cfg, self.slots, self.max_seq,
                                           self.opts)
+        elif self.decode_mode == "paged":
+            self._cache = init_paged_slot_cache(self.cfg, self.slots,
+                                                self.max_seq, self.opts)
+            self._pool = init_paged_pool(self.cfg, self.pool_blocks,
+                                         self.block_size, self.opts)
+            self._blocks = BlockPool(self.slots, self.pool_blocks,
+                                     self.block_size, self.max_seq)
+            self._prefix = PrefixCache(self.prefix_entries)
+            # host-authoritative next-write position per slot (mirrors the
+            # device ``pos`` leaf; drives tail-block growth + freezing)
+            self._slot_pos = [0] * self.slots
+            # admission sequence per slot: preemption under pool pressure
+            # evicts the youngest admission first
+            self._slot_seq = [0] * self.slots
+            self._admit_seq = itertools.count(1)
+            self._update_block_gauges()
         else:
             self._caches = [init_cache(self.cfg, 1, self.max_seq, self.opts)
                             for _ in range(self.slots)]
+
+    def _update_block_gauges(self) -> None:
+        self.metrics.gauge("engine.blocks_used").set(self._blocks.used_blocks)
+        self.metrics.gauge("engine.blocks_free").set(self._blocks.free_blocks)
+        self.metrics.gauge("engine.blocks_shared").set(
+            self._blocks.shared_blocks)
+
+    @property
+    def block_pool(self) -> Optional[BlockPool]:
+        """The host-side block allocator (``None`` off the paged path) —
+        exposed so tests and benches can assert refcounts/sharing."""
+        return self._blocks if self.decode_mode == "paged" else None
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
@@ -340,6 +480,12 @@ class ServingEngine:
                 r = self._queue.popleft()
                 if len(r.generated) >= r.max_new_tokens:
                     r.done = True
+                    continue
+                if r.frozen is not None:
+                    # frozen state thaws (or falls back) only at the queue
+                    # head — bursting it through prefill here would drop
+                    # its generated suffix from the bucket computation
+                    kept.append(r)
                     continue
                 if self._bucket(len(r.prompt)) == bucket:
                     batch.append(r)
@@ -423,10 +569,30 @@ class ServingEngine:
                                 args={"bucket": bucket, "k": k,
                                       "k_bucket": kb,
                                       "rids": [r.rid for r in batch]})
-        fn = self._prefill_batch_fn(bucket, kb)
-        first, self._cache = fn(self.params, self._cache, jnp.asarray(toks),
-                                jnp.asarray(slot_ids), jnp.asarray(keys),
-                                jnp.asarray(temps), jnp.asarray(top_ks))
+        if self.decode_mode == "paged":
+            nblk = bucket // self.block_size
+            # pad rows scatter into the trash block; real rows into fresh
+            # private blocks (the pool cap in _admit_paged_head guarantees
+            # the allocation succeeds)
+            dest = np.zeros((kb, nblk), np.int32)
+            for i, req in enumerate(batch):
+                ids = self._blocks.alloc(nblk)
+                dest[pad + i] = ids
+                for j, b in enumerate(ids):
+                    self._blocks.assign(slots_for[i], j, b)
+            fn = self._paged_prefill_fn(bucket, kb)
+            first, last, self._cache, self._pool = fn(
+                self.params, self._cache, self._pool, jnp.asarray(toks),
+                jnp.asarray(slot_ids), jnp.asarray(keys),
+                jnp.asarray(temps), jnp.asarray(top_ks),
+                jnp.asarray(dest))
+        else:
+            last = None
+            fn = self._prefill_batch_fn(bucket, kb)
+            first, self._cache = fn(self.params, self._cache,
+                                    jnp.asarray(toks), jnp.asarray(slot_ids),
+                                    jnp.asarray(keys), jnp.asarray(temps),
+                                    jnp.asarray(top_ks))
         first = jax.device_get(first)
         self.stats.prefill_calls += 1
         stamp = time.perf_counter()
@@ -434,8 +600,77 @@ class ServingEngine:
             self.recorder.end("engine.prefill", pid=self.pid, tid="engine",
                               cat="engine", wall_s=stamp)
         for i, req in enumerate(batch):
-            self._emit_first(req, int(first[pad + i]), stamp, free,
-                             slots_for[i])
+            slot = slots_for[i]
+            if self.decode_mode == "paged":
+                # dedup freshly written prompt blocks against live blocks
+                # holding the same padded-prefix chain hash, then cache
+                # the whole prefill for prefix-skip re-admission
+                padded = toks[pad + i]
+                self._blocks.dedup_slot_prefix(
+                    slot, block_hash_chain(padded, self.block_size,
+                                           salt=self.params_version))
+                self._slot_pos[slot] = bucket
+                self._slot_seq[slot] = next(self._admit_seq)
+                if self.prefix_entries > 0:
+                    self._prefix.insert(
+                        self._prefix.key_of(padded, self.params_version),
+                        PrefixEntry(
+                            block_ids=tuple(
+                                int(b) for b in
+                                self._blocks.tables[slot, :nblk]),
+                            logits_row=last[pad + i],
+                            leaves=self._snapshot_slot_leaves(slot),
+                            pos=bucket),
+                        self._blocks)
+            alive = self._emit_first(req, int(first[pad + i]), stamp, free,
+                                     slot)
+            if self.decode_mode == "paged":
+                if not alive:
+                    # budget completed at prefill: the slot's references
+                    # go, but a cached prefix entry keeps the blocks live
+                    self._blocks.release_slot(slot)
+                self._update_block_gauges()
+
+    def _snapshot_slot_leaves(self, slot: int) -> dict:
+        """Host copies of one slot's non-KV, non-sampling cache leaves
+        (batch=1 layout) — the state a prefix-cache re-admission must
+        restore alongside the shared blocks."""
+        return {name: np.asarray(jax.device_get(leaf[slot]))
+                for name, leaf in self._cache.items() if name != "sample"}
+
+    def _admit_from_prefix(self, req: Request, entry: PrefixEntry,
+                           free: List[int]) -> None:
+        """Admit a request whose padded prompt hit the prefix cache: no
+        prefill jit call at all.  Shared blocks are increfed into the
+        slot's table, the cached non-KV leaves and the request's own
+        sampling state are written to its slot, and the first token is
+        sampled from the cached last-position logits row — bit-identical
+        to what a real prefill would have produced."""
+        slot = free.pop(0)
+        for j, bid in enumerate(entry.block_ids):
+            self._blocks.incref(bid)
+            self._blocks.assign(slot, j, bid)
+        s = self._sampling_of(req)
+        key = jnp.asarray(request_key(s.seed, req.rid, len(req.generated)))
+        temp = jnp.float32(s.temperature)
+        top_k = jnp.int32(s.top_k)
+        tok, key = self._programs.sample_first(entry.logits_row, key, temp,
+                                               top_k)
+        row = {name: jnp.asarray(arr) for name, arr in entry.leaves.items()}
+        self._cache = self._paged_admit_fn()(self._cache, row,
+                                             jnp.int32(slot), key, temp,
+                                             top_k)
+        self._slot_pos[slot] = entry.pos
+        self._slot_seq[slot] = next(self._admit_seq)
+        stamp = time.perf_counter()
+        if self.recorder.enabled:
+            self.recorder.instant("engine.prefix_hit", pid=self.pid,
+                                  tid="engine", cat="engine", wall_s=stamp,
+                                  args={"rid": req.rid,
+                                        "blocks": len(entry.block_ids)})
+        if not self._emit_first(req, int(tok), stamp, free, slot):
+            self._blocks.release_slot(slot)
+        self._update_block_gauges()
 
     def _admit_one(self, req: Request, free: List[int]) -> None:
         """Sequential reference admission: one prefill jit call for this
@@ -515,6 +750,26 @@ class ServingEngine:
                 self._queue.popleft()
                 head.done = True
                 continue
+            if head.frozen is not None:
+                if self.can_thaw(head.frozen):
+                    if not self._thaw_capacity_ok(head.frozen):
+                        # pool backpressure: decode frees blocks.  A thaw
+                        # must never *preempt* to fit — a preempted
+                        # victim at the head would thaw by preempting
+                        # right back, an admission livelock
+                        break
+                    self._queue.popleft()
+                    self._thaw_into_slot(head, free.pop(0))
+                    admitted = True
+                    continue
+                # fingerprint mismatch: drop the blob and re-prefill
+                # prompt+generated (the legacy zero-token-loss requeue)
+                self._discard_frozen(head)
+            if self.decode_mode == "paged":
+                if self._admit_paged_head(head, free):
+                    admitted = True
+                    continue
+                break               # pool exhausted: wait for decode frees
             if self.prefill_mode == "batched":
                 bucket, batch = self._gather_burst(len(free))
                 self._admit_burst(batch, bucket, free)
@@ -524,6 +779,38 @@ class ServingEngine:
             admitted = True
         if admitted:
             self._oom_backoff = 0     # a successful admission heals
+
+    def _admit_paged_head(self, head: Request, free: List[int]) -> bool:
+        """Admit the head request (plus any same-bucket burst) into the
+        paged cache.  Returns False when the pool cannot cover the head's
+        prompt blocks even after evicting cached prefixes — admission
+        then waits for decode to free blocks (backpressure, not loss)."""
+        bucket = self._bucket(len(head.prompt))
+        nblk = bucket // self.block_size
+        entry = self._prefix.lookup(
+            self._prefix.key_of(self._padded_prompt(head, bucket),
+                                self.params_version))
+        if entry is not None:
+            self._queue.popleft()
+            self._admit_from_prefix(head, entry, free)
+            return True
+        if self._blocks.free_blocks < nblk:
+            self._prefix.evict_for_blocks(nblk, self._blocks)
+        max_k = self._blocks.free_blocks // nblk
+        if max_k == 0:
+            return False
+        bucket, batch = self._gather_burst(min(len(free), max_k))
+        self._admit_burst(batch, bucket, free)
+        return True
+
+    def _padded_prompt(self, req: Request, bucket: int) -> np.ndarray:
+        """The left-padded prompt row exactly as prefill sees it — the
+        prefix-sharing unit (KV content is a pure function of it)."""
+        row = np.zeros(bucket, np.int32)
+        prompt = req.prompt[-bucket:] if len(req.prompt) > bucket \
+            else req.prompt
+        row[bucket - len(prompt):] = prompt
+        return row
 
     def _decode_batched(self) -> int:
         if not any(r is not None for r in self._active):
@@ -543,8 +830,16 @@ class ServingEngine:
                    else self._programs.decode_greedy)
         nxt, pos, self._cache = step_fn(
             self.params, self._cache, jnp.asarray(tokens))
+        return self._bookkeep_decode(nxt, pos)
+
+    def _bookkeep_decode(self, nxt, pos) -> int:
+        """Shared post-step bookkeeping for the batched and paged decode
+        paths: one bulk device→host transfer, per-slot token append,
+        finish detection and trace emission."""
         nxt, pos = jax.device_get((nxt, pos))   # one bulk transfer per tick
+        paged = self.decode_mode == "paged"
         emitted = 0
+        freed_blocks = False
         rec = self.recorder
         stamp = time.perf_counter() if rec.enabled else 0.0
         for slot, req in enumerate(self._active):
@@ -552,6 +847,8 @@ class ServingEngine:
                 continue
             req.generated.append(int(nxt[slot]))
             emitted += 1
+            if paged:
+                self._slot_pos[slot] = int(pos[slot])
             if self._sampling_of(req).temperature > 0:
                 self.stats.sampled_tokens += 1
             if rec.enabled:
@@ -562,12 +859,82 @@ class ServingEngine:
                     or int(pos[slot]) >= self.max_seq - 1:
                 req.done = True
                 self._active[slot] = None
+                if paged:
+                    self._blocks.release_slot(slot)
+                    freed_blocks = True
                 if rec.enabled:
                     rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
                             cat="request", wall_s=stamp,
                             args={"rid": req.rid, "reason": "finished",
                                   "tokens": len(req.generated)})
+        if freed_blocks:
+            self._update_block_gauges()
         return emitted
+
+    # ------------------------------------------------------ paged decode --
+    def _alloc_blocks_reclaiming(self, n: int,
+                                 keep_slot: Optional[int] = None
+                                 ) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, reclaiming under pressure: first evict
+        cached prefix entries (LRU), then preempt the youngest-admitted
+        active slot (freeze → requeue head, zero token loss) — never
+        ``keep_slot``, the slot the allocation is for."""
+        ids = self._blocks.alloc(n)
+        while ids is None:
+            if self._prefix.evict_for_blocks(n, self._blocks) == 0:
+                victims = [s for s, r in enumerate(self._active)
+                           if r is not None and s != keep_slot]
+                if not victims:
+                    return None
+                victim = max(victims, key=lambda s: self._slot_seq[s])
+                req = self._active[victim]
+                req.frozen = self._freeze_slot(victim, reason="preempt")
+                self._queue.appendleft(req)
+                self.stats.requeues += 1
+            ids = self._blocks.alloc(n)
+        return ids
+
+    def _ensure_tail_blocks(self) -> None:
+        """Pre-decode growth pass: every active slot must own a private
+        block for the row this step writes.  Buckets are block-aligned,
+        so growth happens exactly at block boundaries; the copy-on-write
+        branch guards the shared-block invariant (a shared block is
+        never written in place)."""
+        bs = self.block_size
+        for slot, req in enumerate(self._active):
+            if req is None:
+                continue
+            idx = self._slot_pos[slot] // bs
+            if idx >= self._blocks.blocks_per_slot:
+                continue             # finishes at the max_seq bound
+            bid = int(self._blocks.tables[slot, idx])
+            if bid != TRASH_BLOCK and self._blocks.refs[bid] <= 1:
+                continue             # private tail already in place
+            ids = self._alloc_blocks_reclaiming(1, keep_slot=slot)
+            if ids is None:          # only this slot is active and the
+                continue             # pool is drained; write lands in
+                                     # trash and the request requeues
+            if bid != TRASH_BLOCK:   # copy-on-write off a shared block
+                self._pool = self._copy_block_fn()(
+                    self._pool, jnp.int32(bid), jnp.int32(ids[0]))
+                self._blocks.decref(bid)
+            self._blocks.assign(slot, idx, ids[0])
+            self._update_block_gauges()
+
+    def _decode_paged(self) -> int:
+        if not any(r is not None for r in self._active):
+            return 0
+        self._ensure_tail_blocks()
+        tokens = np.zeros(self.slots, np.int32)
+        for slot, req in enumerate(self._active):
+            if req is not None:
+                tokens[slot] = req.generated[-1]
+        # block tables are runtime data: constant (slots, max_seq/bs)
+        # shape, so occupancy/sharing churn reuses one compiled program
+        nxt, pos, self._cache, self._pool = self._paged_decode_fn()(
+            self.params, self._cache, self._pool, jnp.asarray(tokens),
+            jnp.asarray(self._blocks.tables))
+        return self._bookkeep_decode(nxt, pos)
 
     def _decode_per_slot(self) -> int:
         emitted = 0
@@ -612,6 +979,8 @@ class ServingEngine:
                       args={"generation": self.generation})
         if self.decode_mode == "batched":
             emitted = self._decode_batched()
+        elif self.decode_mode == "paged":
+            emitted = self._decode_paged()
         else:
             emitted = self._decode_per_slot()
         self.stats.steps += 1
@@ -645,45 +1014,256 @@ class ServingEngine:
             self.step()
             max_steps -= 1
 
-    # ----------------------------------------------------------- adaptation --
-    def requeue_active(self, reason: str = "requeue") -> int:
-        """Re-queue every in-flight request at the head of the queue
-        with **zero token loss**: the prompt becomes prompt+generated
-        and ``generated`` is preserved, so the re-admitted request's
-        PRNG key (folded with its consumed-token count) advances its
-        stream deterministically instead of replaying.  This is the
-        swap-requeue contract, factored out so failover paths (a device
-        evicted mid-decode, an OOMed admission sweep) reuse it verbatim.
-        Returns the number of requests re-queued."""
-        pending = [r for r in self._active if r is not None]
+    # ---------------------------------------------------------- freeze/thaw --
+    @property
+    def fingerprint(self) -> tuple:
+        """The freeze/thaw compatibility fingerprint: a
+        :class:`FrozenRequest` thaws here iff its fingerprint equals
+        this (same config, same runtime options, same weights)."""
+        return (self.cfg, self.opts, self.params_version)
+
+    def can_thaw(self, frozen: Optional[FrozenRequest]) -> bool:
+        """Whether a frozen blob can resume on this engine without
+        re-prefill.  A blob frozen at the sequence bound has nowhere
+        left to write, so it falls back to the requeue path (which
+        truncates to the newest context)."""
+        return (frozen is not None
+                and frozen.fingerprint == self.fingerprint
+                and frozen.pos < self.max_seq - 1)
+
+    def _freeze_slot(self, slot: int, reason: str = "freeze"
+                     ) -> FrozenRequest:
+        """Serialize ``slot``'s in-flight state into a host-side
+        :class:`FrozenRequest` and vacate the slot.  KV is *densified*
+        (paged blocks gathered, rows trimmed to ``pos``) so the blob is
+        portable across block sizes and into dense or per-slot engines.
+        The sampling subtree carries the slot's **advanced** PRNG key, so
+        the thawed stream continues bit for bit."""
+        req = self._active[slot]
+        if self.decode_mode == "per_slot":
+            cache = self._caches[slot]
+            pos = int(jax.device_get(cache["pos"]))
+            leaves = {name: np.asarray(jax.device_get(leaf))
+                      for name, leaf in cache.items() if name != "sample"}
+            sample = {name: np.asarray(jax.device_get(v))
+                      for name, v in cache["sample"].items()}
+        else:
+            pos = (self._slot_pos[slot] if self.decode_mode == "paged"
+                   else int(jax.device_get(self._cache["pos"][slot])))
+            leaves = {name: np.asarray(jax.device_get(leaf[slot]))
+                      for name, leaf in self._cache.items()
+                      if name != "sample"}
+            sample = {name: np.asarray(jax.device_get(arr[slot]))
+                      for name, arr in self._cache["sample"].items()}
+        for name in _SEQ_TRIM_LEAVES:
+            if name in leaves:
+                leaves[name] = leaves[name][:, :, :pos]
+        if self.decode_mode == "paged":
+            # gather this slot's blocks into dense (n_attn, 1, pos, ...) KV
+            bs = self.block_size
+            nblk = blocks_needed(pos, bs)
+            ids = self._blocks.tables[slot, :nblk]
+            for name in ("k", "v"):
+                g = np.asarray(jax.device_get(
+                    self._pool[name][jnp.asarray(ids)]))
+                n_attn, kvh, hd = g.shape[1], g.shape[3], g.shape[4]
+                dense = g.transpose(1, 0, 2, 3, 4).reshape(
+                    n_attn, nblk * bs, kvh, hd)[:, :pos]
+                leaves[name] = dense[:, None]
+        frozen = FrozenRequest(rid=req.rid, pos=pos,
+                               consumed=len(req.generated), leaves=leaves,
+                               sample=sample, fingerprint=self.fingerprint,
+                               reason=reason)
+        self.stats.freezes += 1
         rec = self.recorder
         if rec.enabled:
             stamp = time.perf_counter()
-            for slot, r in enumerate(self._active):
-                if r is not None:   # close its occupancy span: the copy
-                    rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
-                            cat="request", wall_s=stamp,
-                            args={"rid": r.rid, "reason": reason,
-                                  "tokens": len(r.generated)})
-        for r in pending:
-            r_prompt = np.concatenate([r.prompt, np.asarray(r.generated,
-                                                            np.int32)])
-            self._queue.appendleft(dataclasses.replace(
-                r, prompt=r_prompt, generated=list(r.generated)))
-        self._active = [None] * self.slots
+            rec.instant("req.freeze", pid=self.pid, tid=f"slot{slot}",
+                        cat="request", wall_s=stamp,
+                        args={"rid": req.rid, "reason": reason, "pos": pos})
+            rec.end("req.slot", pid=self.pid, tid=f"slot{slot}",
+                    cat="request", wall_s=stamp,
+                    args={"rid": req.rid, "reason": reason,
+                          "tokens": len(req.generated)})
+        self._active[slot] = None
+        if self.decode_mode == "paged":
+            self._blocks.release_slot(slot)
+            self._update_block_gauges()
+        return frozen
+
+    def freeze(self, rid: int) -> Optional[Request]:
+        """Freeze the active request with id ``rid`` and hand it back
+        (blob attached as ``req.frozen``); the caller owns it — submit
+        it to a compatible engine via :meth:`thaw`.  Returns ``None``
+        when ``rid`` is not currently decoding here."""
+        for slot, r in enumerate(self._active):
+            if r is not None and r.rid == rid:
+                r.frozen = self._freeze_slot(slot, reason="freeze")
+                return r
+        return None
+
+    def freeze_all(self, reason: str = "freeze") -> List[Request]:
+        """Freeze every in-flight request (slot order) and hand the
+        detached requests back — the fleet's migration primitive."""
+        out: List[Request] = []
+        for slot, r in enumerate(self._active):
+            if r is not None:
+                r.frozen = self._freeze_slot(slot, reason=reason)
+                out.append(r)
+        return out
+
+    def thaw(self, req: Request) -> bool:
+        """Accept a frozen request: queued at the *head*, it resumes with
+        zero re-prefill on the next admission sweep if its blob matches
+        this engine's fingerprint.  Returns False when the blob is
+        incompatible — it is dropped and the request re-admits through
+        the legacy prompt+generated re-prefill path (still zero token
+        loss, but a prefill call)."""
+        ok = self.can_thaw(req.frozen)
+        if not ok and req.frozen is not None:
+            self._discard_frozen(req)
+        self._queue.appendleft(req)
+        return ok
+
+    def _discard_frozen(self, req: Request) -> None:
+        """Fingerprint-mismatch fallback: fold the generated suffix into
+        the prompt (the legacy zero-token-loss requeue contract) and drop
+        the blob — the request re-admits via ordinary prefill, its PRNG
+        key folded with its consumed count so the stream advances
+        deterministically instead of replaying."""
+        req.prompt = np.concatenate([np.asarray(req.prompt, np.int32),
+                                     np.asarray(req.generated, np.int32)])
+        req.frozen = None
+
+    def _padded_to(self, src: np.ndarray, shape, dtype) -> jnp.ndarray:
+        """Zero-pad a trimmed blob leaf back to a full cache leaf."""
+        if tuple(src.shape) == tuple(shape):
+            return jnp.asarray(src, dtype)
+        buf = np.zeros(shape, dtype)
+        buf[tuple(slice(0, d) for d in src.shape)] = src
+        return jnp.asarray(buf)
+
+    def _thaw_capacity_ok(self, frozen: FrozenRequest) -> bool:
+        """Paged-mode admission guard: can the pool cover this blob's
+        blocks right now (after evicting cached prefixes if needed)?
+        Off the paged path there is nothing to allocate."""
+        if self.decode_mode != "paged":
+            return True
+        need = blocks_needed(frozen.pos, self.block_size)
+        if self._blocks.free_blocks < need:
+            self._prefix.evict_for_blocks(need, self._blocks)
+        return self._blocks.free_blocks >= need
+
+    def _thaw_into_slot(self, req: Request, slot: int) -> None:
+        """Re-materialize a frozen request in ``slot`` with **zero
+        re-prefill**: blob leaves are zero-padded back to full cache
+        shape (padding beyond ``pos`` is never read unmasked) and the
+        slot resumes decoding from the blob's advanced sampling key."""
+        fz = req.frozen
+        key = jnp.asarray(fz.sample["key"])
+        temp = jnp.asarray(fz.sample["temp"], jnp.float32)
+        top_k = jnp.asarray(fz.sample["top_k"], jnp.int32)
+        if self.decode_mode == "per_slot":
+            cache = init_cache(self.cfg, 1, self.max_seq, self.opts)
+            cache = {name: self._padded_to(fz.leaves[name], leaf.shape,
+                                           leaf.dtype)
+                     for name, leaf in cache.items()}
+            cache["sample"] = {"key": key, "temp": temp, "top_k": top_k}
+            self._caches[slot] = cache
+        elif self.decode_mode == "batched":
+            row = {name: self._padded_to(fz.leaves[name], leaf.shape[1:],
+                                         leaf.dtype)
+                   for name, leaf in self._cache.items() if name != "sample"}
+            self._cache = self._programs.admit_slot(
+                self._cache, row, jnp.int32(slot), key, temp, top_k)
+        else:
+            bs = self.block_size
+            nblk = blocks_needed(fz.pos, bs)
+            # program count stays bounded: the scatter is keyed on the
+            # *bucketed* block count, trailing ids aimed at trash
+            nblk_prog = self._bucket(fz.pos) // bs
+            ids = self._alloc_blocks_reclaiming(nblk, keep_slot=slot)
+            if ids is None:
+                raise RuntimeError("paged pool cannot hold one thawed "
+                                   "request — pool_blocks misconfigured")
+            for j, b in enumerate(ids):
+                self._blocks.assign(slot, j, b)
+            rows = {}
+            for name in ("k", "v"):
+                src = fz.leaves[name][:, 0]          # (n_attn, pos, kvh, hd)
+                n_attn, _, kvh, hd = src.shape
+                buf = np.zeros((n_attn, nblk_prog * bs, kvh, hd), src.dtype)
+                buf[:, :fz.pos] = src
+                rows[name] = jnp.asarray(
+                    buf.reshape(n_attn, nblk_prog, bs, kvh, hd)
+                    .transpose(1, 0, 2, 3, 4))
+            ids_arr = np.full(nblk_prog, TRASH_BLOCK, np.int32)
+            ids_arr[:nblk] = ids
+            self._pool = self._thaw_scatter_fn(nblk_prog)(
+                self._pool, rows["k"], rows["v"], jnp.asarray(ids_arr))
+            row = {name: self._padded_to(fz.leaves[name], leaf.shape[1:],
+                                         leaf.dtype)
+                   for name, leaf in self._cache.items() if name != "sample"}
+            self._cache = self._paged_admit_fn()(self._cache, row,
+                                                 jnp.int32(slot), key, temp,
+                                                 top_k)
+            self._slot_pos[slot] = fz.pos
+            self._slot_seq[slot] = next(self._admit_seq)
+            self._update_block_gauges()
+        req.frozen = None
+        self._active[slot] = req
+        self.stats.thaws += 1
+        if self.recorder.enabled:
+            stamp = time.perf_counter()
+            self.recorder.instant("req.thaw", pid=self.pid,
+                                  tid=f"slot{slot}", cat="request",
+                                  wall_s=stamp,
+                                  args={"rid": req.rid, "pos": fz.pos,
+                                        "consumed": fz.consumed})
+            self.recorder.begin("req.slot", pid=self.pid, tid=f"slot{slot}",
+                                cat="request", wall_s=stamp,
+                                args={"rid": req.rid})
+
+    def drain_waiting(self) -> List[Request]:
+        """Detach every *waiting* (queued, not yet admitted) request in
+        FIFO order — the migration caller re-submits them on the
+        destination engine alongside the frozen in-flight ones."""
+        out = list(self._queue)
+        self._queue.clear()
+        return out
+
+    # ----------------------------------------------------------- adaptation --
+    def requeue_active(self, reason: str = "requeue") -> int:
+        """Re-queue every in-flight request at the head of the queue
+        with **zero token loss** — and, since the paging PR, zero
+        re-prefill: each request is frozen (KV + sampling state
+        serialized host-side) and thaws straight back into a slot when
+        its blob matches the engine's fingerprint.  Incompatible blobs
+        (e.g. after a variant swap) fall back to the legacy
+        prompt+generated re-prefill, whose PRNG key folds the consumed
+        count so the stream advances deterministically instead of
+        replaying.  Returns the number of requests re-queued."""
+        pending: List[Request] = []
+        for slot, r in enumerate(self._active):
+            if r is not None:
+                r.frozen = self._freeze_slot(slot, reason=reason)
+                pending.append(r)
+        for r in reversed(pending):
+            self._queue.appendleft(r)
         self.stats.requeues += len(pending)
         return len(pending)
 
     def swap_model(self, cfg: ModelConfig, params: Params,
-                   opts: RuntimeOptions) -> None:
+                   opts: RuntimeOptions,
+                   params_version: Optional[int] = None) -> None:
         """Middleware hook: switch the serving variant.  Active requests
-        finish their decode on fresh caches via re-prefill of their
-        generated prefix (retraining-free variant switching).  The stacked
-        cache is rebuilt once per generation; programs come from the
-        compile cache, so swapping back to an already-served variant
-        costs zero compiles.  A re-admitted request's PRNG key is folded
-        with its consumed-token count, so its resumed stream advances
-        deterministically instead of replaying."""
+        are frozen and re-queued; after the caches rebuild they thaw
+        with **zero re-prefill** when the new binding matches their blob
+        (same cfg/opts/weights — e.g. a placement-driven engine restart),
+        and fall back to re-prefilling their generated prefix when the
+        variant really changed (retraining-free variant switching).
+        Programs come from the compile cache, so swapping back to an
+        already-served variant costs zero compiles."""
         requeued = self.requeue_active(reason="swap_requeue")
         if self.recorder.enabled:
             self.recorder.instant(
@@ -691,6 +1271,15 @@ class ServingEngine:
                 args={"generation": self.generation + 1,
                       "requeued": requeued})
         self.cfg, self.params, self.opts = cfg, params, opts
+        self.params_version = (params_version if params_version is not None
+                               else id(params))
         self.generation += 1
         self._programs = self._bind_programs()
         self._reset_caches()
+        # blobs that can't thaw against the new binding re-admit via the
+        # legacy path; dropping them up front lets the whole requeue
+        # merge into one admission burst instead of k head-of-line
+        # fragments (pinned by the swap prefill_calls tests)
+        for r in self._queue:
+            if r.frozen is not None and not self.can_thaw(r.frozen):
+                self._discard_frozen(r)

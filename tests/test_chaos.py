@@ -15,6 +15,10 @@ Invariants pinned here, per ISSUE 7:
 * **quarantine hysteresis** — a flapping helper is readmitted but not
   *selected* until its quarantine expires; recovery placements pass the
   normal hysteresis gate (they go through ``FleetPlacer.place``);
+* **live migration** (ISSUE 8) — an evicted engine-backed member's
+  in-flight requests freeze and thaw on a same-domain peer with zero
+  token loss and zero re-prefill, bit-identical to the unfaulted run;
+  without a peer they requeue locally and nothing is lost;
 * **observability** — every fault/detection/recovery run exports a
   trace that still validates under ``tools/check_trace.py``;
 * **fault-free bit-identity** — the detector enabled on a healthy
@@ -406,6 +410,117 @@ def test_requeue_active_preserves_streams_and_counts():
         assert len(r.generated) == len(want[rid])   # no loss, no dupes
     total = sum(len(r.generated) for r in final.values())
     assert eng.stats.tokens_out == total          # each token counted once
+
+
+# ------------------------------------------------ freeze/thaw migration --
+def _submit_long_mix(eng, budget=30):
+    """The chaos mix with budgets long enough that nothing finishes
+    before a mid-run fault lands."""
+    reqs = []
+    for i in range(4):
+        rng = np.random.default_rng(31 * i + 5)
+        r = Request(rid=i,
+                    prompt=rng.integers(0, TINY.vocab_size,
+                                        size=5 + i).astype(np.int32),
+                    max_new_tokens=budget)
+        reqs.append(r)
+        eng.submit(r)
+    return reqs
+
+
+def _long_baseline(budget=30, slots=2):
+    eng = ServingEngine(TINY, PARAMS, slots=slots, max_seq=64,
+                        compile_cache=CC)
+    reqs = _submit_long_mix(eng, budget)
+    eng.drain()
+    return _streams(reqs)
+
+
+def test_injected_crash_migrates_in_flight_requests_exactly(tmp_path):
+    """CRASH on an engine-backed helper: the detector evicts it, the
+    controller freezes its in-flight requests (paged source) and thaws
+    them on the same-domain peer (dense destination) — exact unfaulted
+    streams, zero token loss, zero re-prefill, all audited from the
+    same trace the rest of the stack exports."""
+    want = _long_baseline()
+    fleet = _fleet()
+    src_id, dst_id = fleet[1].device_id, fleet[2].device_id
+    rec = TraceRecorder()
+    dcfg = DetectorConfig(suspect_after=2.5, dead_after=5.0)
+    ctl = _controller(fleet, recorder=rec, detector_config=dcfg)
+    src = ctl.build_engine(src_id, PARAMS, cfg=TINY, slots=2, max_seq=64,
+                           decode_mode="paged", steps_per_tick=1)
+    dst = ctl.build_engine(dst_id, PARAMS, cfg=TINY, slots=2, max_seq=64,
+                           steps_per_tick=4)
+    reqs = _submit_long_mix(src)
+    src.step()
+    src.step()                          # rids 0/1 mid-decode, 2/3 queued
+    assert all(len(r.generated) >= 2 for r in reqs[:2])
+    FaultInjector(ctl, [FaultSpec(CRASH, src_id,
+                                  at_s=ctl.now_s + 0.5)]).arm()
+    ctl.run_for(20.0)
+    dst.drain()
+    assert any(e.name == "fleet.evict" and e.args["device"] == src_id
+               for e in rec.events)
+    assert ctl.migrations == 4          # 2 frozen + 2 waiting moved
+    assert _streams(reqs) == want       # bit-identical to unfaulted run
+    # the frozen rids thawed — they never prefilled on the destination
+    assert dst.stats.thaws == 2 and dst.stats.prefills == 2
+    [mig] = [e for e in rec.events if e.name == "fleet.migrate"]
+    assert sorted(mig.args["zero_reprefill"]) == [0, 1]
+    assert mig.args["fallback"] == []
+    assert mig.args["recovered_tokens"] >= 4
+    # the trace-derived audit agrees: no migrated rid ever re-prefilled
+    summ = summarize_faults(rec.events)
+    assert summ["migrated_requests"] == 2
+    assert summ["migrated_reprefills"] == 0
+    assert all(m["dst"] == dst_id for m in summ["migrations"])
+    path = tmp_path / "migration.json"
+    write_trace(rec, str(path))
+    assert check_trace.check(path, require_layers=LAYERS) == 0
+
+
+def test_eviction_without_peer_requeues_locally_nothing_lost():
+    """No same-domain engine-backed peer: eviction falls back to the
+    local requeue — zero migrations, but the engine still holds every
+    request and finishes them with the earned prefix intact."""
+    want = _baseline_streams()
+    fleet = _fleet()
+    src_id = fleet[3].device_id         # the only engine in the fleet
+    rec = TraceRecorder()
+    ctl = _controller(fleet, recorder=rec)
+    src = ctl.build_engine(src_id, PARAMS, cfg=TINY, slots=2, max_seq=64,
+                           decode_mode="paged", steps_per_tick=1)
+    reqs = _submit_long_mix(src, budget=6)
+    src.step()
+    pre = {r.rid: tuple(r.generated) for r in reqs}
+    ctl.drop_device(src_id)             # announced eviction, no peer
+    assert ctl.migrations == 0
+    assert src.stats.requeues == 2      # actives went back to the queue
+    assert not any(e.name == "req.migrate" for e in rec.events)
+    assert summarize_faults(rec.events)["migrated_requests"] == 0
+    src.drain()
+    assert _streams(reqs) == want
+    for rid, prefix in pre.items():
+        assert _streams(reqs)[rid][:len(prefix)] == prefix  # no replay
+
+
+def test_same_params_swap_does_not_grow_prefill_calls():
+    """Swap-requeue regression: a same-variant ``swap_model`` freezes
+    and thaws every in-flight request — ``prefill_calls`` must not grow
+    and the streams must match the unswapped run bit for bit."""
+    from repro.models.runtime import DEFAULT_OPTIONS
+    want = _long_baseline(budget=6, slots=4)
+    eng = ServingEngine(TINY, PARAMS, slots=4, max_seq=64,
+                        compile_cache=CC)
+    reqs = _submit_long_mix(eng, budget=6)
+    eng.step()                          # all four admitted and decoding
+    calls = eng.stats.prefill_calls
+    eng.swap_model(TINY, PARAMS, DEFAULT_OPTIONS)
+    eng.drain()
+    assert eng.stats.prefill_calls == calls     # zero re-prefill
+    assert eng.stats.thaws == 4
+    assert _streams(reqs) == want
 
 
 # ----------------------------------------------------------- regressions --

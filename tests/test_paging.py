@@ -1,0 +1,450 @@
+"""Differential paging suite: the paged KV cache must be invisible.
+
+* ``decode_mode="paged"`` produces token streams **bit-identical** to
+  the dense batched decode over random request mixes (prompt lengths,
+  budgets, admit times, sampling temperatures) and block sizes — the
+  gather-to-dense view plus REPLACE masking means garbage beyond
+  ``pos`` contributes exactly zero, so equality is exact, not approx.
+* Block tables are runtime data: serving a second wave with different
+  pool fragmentation (different table *contents*) and a second engine
+  with the same geometry cost **zero** new program compiles.
+* Prefix sharing is copy-on-write-safe: identical prompts share their
+  prompt blocks (observable refcounts), post-fork decode never mutates
+  a shared block, and freeing one sharer leaves the others' streams
+  bit-identical.  Full-prompt prefix hits re-admit with
+  ``prefill_calls += 0``.
+* ``freeze``/``thaw`` round-trips are exact — same engine, across
+  block sizes, across decode modes — and incompatible blobs fall back
+  to the legacy requeue with zero token loss.
+* A deliberately tight pool exercises allocation backpressure and
+  decode-driven preemption without livelock or stream drift.
+"""
+import types
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # deterministic corpus still runs
+    HAVE_HYPOTHESIS = False
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.faults import MigrationOutcome, plan_migration
+from repro.models.model import init_params
+from repro.models.runtime import DEFAULT_OPTIONS
+from repro.serving import (CompileCache, PrefixCache, PrefixEntry, Request,
+                           SamplingOpts, ServingEngine, block_hash_chain,
+                           blocks_needed)
+from repro.serving.paging import TRASH_BLOCK, BlockPool
+
+CFG = get_config("paper-backbone").with_updates(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=300)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+MAX_SEQ = 64
+# one cache for the whole module: every example reuses compiled programs
+CC = CompileCache()
+
+# deterministic request mixes — (prompt length, token budget,
+# submit-at-step, temperature) — covering the same space the hypothesis
+# strategies below fuzz: single/short/long prompts, bucket boundaries,
+# mid-stream admits, greedy and high-temperature sampling, duplicate specs
+MIX_CORPUS = [
+    [(1, 1, 0, 0.0)],
+    [(40, 6, 0, 0.8)],
+    [(5, 4, 0, 0.0), (20, 4, 1, 0.8), (33, 3, 2, 1.4), (9, 2, 2, 0.0)],
+    [(16, 3, 0, 1.4), (16, 3, 0, 1.4), (17, 3, 3, 0.8)],
+    [(7, 6, 1, 0.8), (22, 5, 2, 0.0), (11, 4, 3, 1.4), (3, 2, 0, 0.0),
+     (28, 3, 1, 0.8), (13, 2, 2, 1.4)],
+]
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = settings(max_examples=12, deadline=None,
+                        suppress_health_check=[HealthCheck.too_slow,
+                                               HealthCheck.data_too_large])
+    REQ_SPEC = st.tuples(st.integers(1, 40), st.integers(1, 6),
+                         st.integers(0, 3),
+                         st.sampled_from([0.0, 0.8, 1.4]))
+    REQ_MIXES = st.lists(REQ_SPEC, min_size=1, max_size=6)
+    BLOCK_SIZES = st.sampled_from([4, 8, 16])
+
+
+def _prompt(length: int, rid: int) -> np.ndarray:
+    rng = np.random.default_rng(31 * length + rid)
+    return rng.integers(0, CFG.vocab_size, size=length).astype(np.int32)
+
+
+def _requests(mix, rid_base=0):
+    return [Request(rid=rid_base + i, prompt=_prompt(n, rid_base + i),
+                    max_new_tokens=budget,
+                    sampling=SamplingOpts(temperature=temp, seed=5))
+            for i, (n, budget, _, temp) in enumerate(mix)]
+
+
+def _engine(**kw):
+    kw.setdefault("slots", 2)
+    return ServingEngine(CFG, PARAMS, max_seq=MAX_SEQ, compile_cache=CC,
+                         **kw)
+
+
+def _drive(eng, reqs, mix, max_steps=200):
+    """Admit on the mix's schedule and step until every request is done."""
+    step = 0
+    while any(not r.done for r in reqs):
+        for r, (_, _, at, _) in zip(reqs, mix):
+            if at == step:
+                eng.submit(r)
+        eng.step()
+        step += 1
+        assert step < max_steps, "engine failed to drain"
+    return [tuple(r.generated) for r in reqs]
+
+
+def _run(mix, *, rid_base=0, max_steps=200, **kw):
+    eng = _engine(**kw)
+    reqs = _requests(mix, rid_base)
+    streams = _drive(eng, reqs, mix, max_steps)
+    return streams, eng
+
+
+# ------------------------------------------------- paged ≡ dense batched --
+_DENSE = {}     # memoized dense baselines, shared across block sizes
+
+
+def _dense_baseline(mix):
+    key = tuple(mix)
+    if key not in _DENSE:
+        streams, eng = _run(mix, decode_mode="batched")
+        _DENSE[key] = (streams, eng.stats.prefills,
+                       eng.stats.prefill_calls)
+    return _DENSE[key]
+
+
+def _check_paged_matches_dense(mix, block_size):
+    paged, peng = _run(mix, decode_mode="paged", block_size=block_size)
+    dense, prefills, calls = _dense_baseline(mix)
+    assert paged == dense                       # bit-identical streams
+    assert peng.stats.prefills == prefills
+    assert peng.stats.prefill_calls <= calls
+    # the drained pool leaks nothing: every slot returned its blocks
+    assert (peng.block_pool.tables == TRASH_BLOCK).all()
+
+
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+@pytest.mark.parametrize("mix", MIX_CORPUS, ids=range(len(MIX_CORPUS)))
+def test_paged_decode_matches_dense_batched(mix, block_size):
+    _check_paged_matches_dense(mix, block_size)
+
+
+@pytest.mark.parametrize("mix", MIX_CORPUS[2:], ids=range(2, 5))
+def test_paged_matches_per_slot_reference(mix):
+    paged, _ = _run(mix, decode_mode="paged", slots=3)
+    ref, _ = _run(mix, decode_mode="per_slot", slots=3)
+    assert paged == ref
+
+
+if HAVE_HYPOTHESIS:
+    @SETTINGS
+    @given(mix=REQ_MIXES, block_size=BLOCK_SIZES)
+    def test_paged_decode_matches_dense_batched_fuzzed(mix, block_size):
+        _check_paged_matches_dense(mix, block_size)
+
+
+# --------------------------------------------- block tables as runtime data --
+def test_no_recompiles_across_block_table_shapes():
+    """Different pool fragmentation / occupancy = different table
+    *contents*, never different compiled programs.  The outer compile
+    key stays ``(cfg, opts, slots, max_seq, domain)``."""
+    mix = [(5, 4, 0, 0.0), (20, 4, 1, 0.8), (33, 3, 2, 1.4),
+           (9, 2, 2, 0.0)]
+    eng = _engine(decode_mode="paged", slots=2)
+    _drive(eng, _requests(mix), mix)
+    warm = eng.stats.recompiles
+    # second wave on the same engine: same buckets/burst shapes but a
+    # fragmented pool + populated prefix cache → different tables
+    _drive(eng, _requests(mix, rid_base=100), mix)
+    assert eng.stats.recompiles == warm
+
+    # a second engine with identical geometry shares every program
+    eng2 = _engine(decode_mode="paged", slots=2)
+    _drive(eng2, _requests(mix, rid_base=200), mix)
+    assert eng2.stats.recompiles == 0
+
+
+def test_paged_rejects_invalid_block_size():
+    for bad in (0, 3, 5, 32):
+        with pytest.raises(ValueError):
+            _engine(decode_mode="paged", block_size=bad)
+
+
+# --------------------------------------------------------- prefix sharing --
+def test_identical_prompts_share_prompt_blocks():
+    """A burst of identical prompts dedups to one physical copy of the
+    prompt blocks; divergent decode tails never touch them."""
+    prompt = _prompt(20, 0)                 # bucket 32 → 2 prompt blocks
+    solo = {}
+    for rid in range(4):
+        eng = _engine(decode_mode="paged", block_size=16, slots=1)
+        req = Request(rid=rid, prompt=prompt.copy(), max_new_tokens=6,
+                      sampling=SamplingOpts(temperature=1.2, seed=5))
+        eng.submit(req)
+        eng.drain()
+        solo[rid] = tuple(req.generated)
+
+    eng = _engine(decode_mode="paged", block_size=16, slots=4)
+    # rid 0 finishes first: freeing one sharer must not disturb the rest
+    reqs = [Request(rid=rid, prompt=prompt.copy(),
+                    max_new_tokens=3 if rid == 0 else 6,
+                    sampling=SamplingOpts(temperature=1.2, seed=5))
+            for rid in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                              # one burst admits all four
+    pool = eng.block_pool
+    tables = pool.tables
+    first = [tuple(tables[s, :2]) for s in range(4)]
+    assert first.count(first[0]) == 4       # all slots map the same blocks
+    assert TRASH_BLOCK not in first[0]
+    assert pool.shared_blocks >= 2
+    assert all(int(pool.refs[b]) >= 4 for b in first[0])
+    eng.drain()
+    # post-fork writes never mutated the shared blocks: every sharer's
+    # stream is bit-identical to its solo run, including after rid 0
+    # finished and dropped its references
+    for r in reqs:
+        assert tuple(r.generated) == solo[r.rid][:r.max_new_tokens]
+
+
+def test_prefix_hit_readmission_skips_prefill():
+    """Re-admitting a full prompt already in the prefix cache costs zero
+    prefill calls and stays bit-identical to a cold admission."""
+    prompt = _prompt(18, 7)
+    opts = SamplingOpts(temperature=0.9, seed=3)
+
+    cold_eng = _engine(decode_mode="paged", slots=1)
+    cold = Request(rid=7, prompt=prompt.copy(), max_new_tokens=5,
+                   sampling=opts)
+    cold_eng.submit(cold)
+    cold_eng.drain()
+
+    eng = _engine(decode_mode="paged", slots=1)
+    warmer = Request(rid=99, prompt=prompt.copy(), max_new_tokens=5,
+                     sampling=opts)
+    eng.submit(warmer)
+    eng.drain()
+    calls = eng.stats.prefill_calls
+    hit = Request(rid=7, prompt=prompt.copy(), max_new_tokens=5,
+                  sampling=opts)
+    eng.submit(hit)
+    eng.drain()
+    assert eng.stats.prefill_calls == calls     # prefill skipped entirely
+    assert eng.stats.prefills == 2              # but still accounted
+    assert tuple(hit.generated) == tuple(cold.generated)
+
+
+# ------------------------------------------------------------ freeze/thaw --
+def _freeze_after(eng, reqs, steps):
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(steps):
+        eng.step()
+    moved = eng.freeze_all("migrate") + eng.drain_waiting()
+    assert not eng.has_work
+    return moved
+
+
+def test_freeze_thaw_same_engine_is_exact():
+    mix = [(9, 6, 0, 1.2), (25, 6, 0, 0.0)]
+    baseline, _ = _run(mix, decode_mode="paged")
+    eng = _engine(decode_mode="paged")
+    reqs = _requests(mix)
+    moved = _freeze_after(eng, reqs, steps=3)
+    assert all(r.frozen is not None for r in moved if r.generated)
+    for r in moved:
+        assert eng.thaw(r)
+    eng.drain()
+    assert [tuple(r.generated) for r in reqs] == baseline
+    assert eng.stats.freezes >= 1 and eng.stats.thaws >= 1
+
+
+@pytest.mark.parametrize("dst_kw", [
+    dict(decode_mode="paged", block_size=4),
+    dict(decode_mode="paged", block_size=16),
+    dict(decode_mode="batched"),
+    dict(decode_mode="per_slot"),
+])
+def test_freeze_thaw_migrates_across_geometries(dst_kw):
+    """Freeze blobs are portable: a paged bs=8 source thaws on paged
+    engines with other block sizes and on dense engines, with zero
+    re-prefill and bit-identical continuations."""
+    mix = [(9, 6, 0, 1.2), (25, 6, 0, 0.8), (30, 5, 0, 0.0)]
+    baseline, _ = _run(mix, decode_mode="paged", slots=3)
+    src = _engine(decode_mode="paged", block_size=8, slots=3)
+    reqs = _requests(mix)
+    moved = _freeze_after(src, reqs, steps=3)
+
+    dst = _engine(slots=3, **dst_kw)
+    plan = plan_migration(moved, dst.can_thaw)
+    assert set(plan.migrated) == {r.rid for r in moved
+                                  if r.frozen is not None}
+    calls = dst.stats.prefill_calls
+    for r in moved:
+        assert dst.thaw(r)
+    dst.drain()
+    # only requests frozen *pre-admission* (blob-less) may prefill here
+    assert dst.stats.prefill_calls - calls <= len(plan.fallback)
+    assert [tuple(r.generated) for r in reqs] == baseline
+
+
+def test_incompatible_blob_falls_back_without_token_loss():
+    """A fingerprint mismatch can't thaw: the blob is dropped and the
+    generated prefix folds into the prompt for an ordinary re-prefill.
+    That path guarantees zero token *loss* — everything earned before
+    the fallback is preserved verbatim and never re-emitted, and the
+    request still reaches its full budget — but not bit-identity: the
+    merged prompt re-buckets, so the continuation's cache layout (and
+    therefore its sampled tokens) may legitimately differ from the
+    uninterrupted run's."""
+    mix = [(9, 6, 0, 1.2), (25, 6, 0, 0.0)]
+    baseline, _ = _run(mix, decode_mode="paged")
+    src = _engine(decode_mode="paged", params_version="v1")
+    reqs = _requests(mix)
+    moved = _freeze_after(src, reqs, steps=3)
+    kept = {r.rid: tuple(r.generated) for r in moved}
+    # pre-freeze decoding was undisturbed: earned tokens match baseline
+    for r, base in zip(reqs, baseline):
+        assert kept[r.rid] == base[:len(kept[r.rid])]
+
+    dst = _engine(decode_mode="paged", params_version="v2")
+    frozen = [r for r in moved if r.frozen is not None]
+    assert frozen and all(not dst.can_thaw(r.frozen) for r in frozen)
+    for r in moved:
+        dst.thaw(r)                 # falls back to the legacy requeue
+    assert all(r.frozen is None for r in moved)
+    dst.drain()
+    assert dst.stats.prefill_calls > 0      # the fallback did re-prefill
+    assert dst.stats.thaws == 0
+    for r, (_, budget, _, _) in zip(reqs, mix):
+        assert tuple(r.generated)[:len(kept[r.rid])] == kept[r.rid]
+        assert len(r.generated) == budget       # full budget, no loss
+
+
+@pytest.mark.parametrize("decode_mode", ["batched", "paged"])
+def test_swap_model_same_params_reprefills_nothing(decode_mode):
+    """A same-variant ``swap_model`` (e.g. a placement-driven restart)
+    freezes, rebuilds and thaws: zero extra prefill calls for in-flight
+    requests, streams bit-identical to an unswapped run."""
+    mix = [(9, 6, 0, 1.2), (25, 6, 0, 0.8), (14, 6, 0, 0.0)]
+    baseline, _ = _run(mix, decode_mode=decode_mode, slots=3)
+    eng = _engine(decode_mode=decode_mode, slots=3)
+    reqs = _requests(mix)
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(3):
+        eng.step()
+    calls = eng.stats.prefill_calls
+    eng.swap_model(CFG, PARAMS, DEFAULT_OPTIONS)
+    eng.drain()
+    assert eng.stats.prefill_calls == calls
+    assert [tuple(r.generated) for r in reqs] == baseline
+
+
+# ------------------------------------------------------- pool under stress --
+def test_tight_pool_backpressure_and_preemption_stay_exact():
+    """A pool one block above the single-slot minimum forces admission
+    backpressure and decode-tail preemption; streams must not drift and
+    the engine must not livelock (thaw uses backpressure, never
+    preemption)."""
+    mix = [(5, 30, 0, 0.7), (11, 30, 0, 0.0), (7, 25, 1, 1.4)]
+    baseline, _ = _run(mix, decode_mode="batched", slots=2,
+                       max_steps=600)
+    eng = _engine(decode_mode="paged", block_size=16, slots=2,
+                  pool_blocks=6)
+    reqs = _requests(mix)
+    streams = _drive(eng, reqs, mix, max_steps=600)
+    assert streams == baseline
+    assert eng.stats.freezes >= 1          # preemption actually happened
+    assert eng.stats.thaws == eng.stats.freezes
+    assert (eng.block_pool.tables == TRASH_BLOCK).all()
+
+
+# ----------------------------------------------------------- pure pieces --
+def test_block_pool_refcounts_and_release():
+    pool = BlockPool(slots=2, num_blocks=9, block_size=4, max_seq=32)
+    assert pool.free_blocks == 8            # trash block is pinned out
+    ids = pool.alloc(3)
+    assert len(ids) == 3 and TRASH_BLOCK not in ids
+    assert pool.free_blocks == 5
+    for i, bid in enumerate(ids):
+        pool.assign(0, i, bid)
+    pool.incref(ids[0])
+    pool.assign(1, 0, ids[0])
+    assert pool.shared_blocks == 1
+    assert pool.alloc(100) is None          # all-or-nothing allocation
+    assert pool.free_blocks == 5
+    freed = pool.release_slot(0)
+    assert freed == 2                       # shared block survives slot 0
+    assert pool.free_blocks == 7
+    assert pool.release_slot(1) == 1
+    assert pool.free_blocks == 8
+    assert (pool.tables[:, :] == TRASH_BLOCK).all()
+
+
+def test_blocks_needed_arithmetic():
+    assert blocks_needed(1, 4) == 1
+    assert blocks_needed(4, 4) == 1
+    assert blocks_needed(5, 4) == 2
+    assert blocks_needed(64, 16) == 4
+
+
+def test_block_hash_chain_is_prefix_sensitive():
+    a = np.arange(16, dtype=np.int32)
+    b = a.copy()
+    b[12] = 999                             # diverge in the final block
+    ha = block_hash_chain(a, 4, salt="s")
+    hb = block_hash_chain(b, 4, salt="s")
+    assert len(ha) == 4
+    assert ha[:3] == hb[:3]                 # shared prefix, same hashes
+    assert ha[3] != hb[3]
+    c = a.copy()
+    c[2] = 999                              # diverge in the *first* block
+    hc = block_hash_chain(c, 4, salt="s")
+    assert all(x != y for x, y in zip(ha, hc))   # chain poisons the rest
+    assert block_hash_chain(a, 4, salt="other") != ha
+
+
+def test_prefix_cache_lru_returns_blocks():
+    pool = BlockPool(slots=1, num_blocks=9, block_size=4, max_seq=32)
+    cache = PrefixCache(capacity=2)
+
+    for key in ("a", "b", "c"):
+        ids = pool.alloc(2)             # the writing slot's references
+        cache.insert(key, PrefixEntry(block_ids=tuple(ids),
+                                      logits_row=None, leaves={}, pos=8),
+                     pool)              # insert takes the cache's own ref
+        for bid in ids:
+            pool.decref(bid)            # slot finishes; cache pin remains
+    assert len(cache) == 2
+    assert cache.lookup("a") is None        # LRU-evicted, blocks decref'd
+    assert pool.free_blocks == 4
+    cache.clear(pool)
+    assert pool.free_blocks == 8
+
+
+def test_plan_migration_accounting():
+    def req(rid, frozen, tokens):
+        return types.SimpleNamespace(rid=rid, frozen=frozen,
+                                     generated=[0] * tokens)
+
+    blob = object()
+    plan = plan_migration(
+        [req(1, blob, 4), req(2, None, 2), req(3, blob, 0)],
+        can_thaw=lambda f: f is blob)
+    assert plan == MigrationOutcome(migrated=(1, 3), fallback=(2,),
+                                    recovered_tokens=6)
+    assert plan.total == 3
