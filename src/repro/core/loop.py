@@ -73,6 +73,21 @@ class AdaptationLoop:
         self.current: Optional[Decision] = None
         self.decisions: List[Decision] = []
         self._tick = 0
+        # SLO burn-rate pressure (0.0 = healthy).  Set by the fleet
+        # controller while an SLO is burning; tick() then short-circuits
+        # to the cheapest variant instead of the accuracy-first policy.
+        self._pressure = 0.0
+
+    # ----------------------------------------------------- slo pressure --
+    def set_pressure(self, p: float) -> None:
+        """Install (or clear, with 0.0) SLO burn-rate pressure.  The
+        healthy path is untouched while pressure is zero — SLO-healthy
+        runs stay bit-identical to pressure-free ones."""
+        self._pressure = float(p)
+
+    @property
+    def pressure(self) -> float:
+        return self._pressure
 
     # --------------------------------------------------- placement targets --
     def set_offload_targets(self, choices: Sequence[OffloadChoice]) -> None:
@@ -130,6 +145,32 @@ class AdaptationLoop:
                                  self.hw.hbm_bytes * ctx.chips_available)))
         if not self.front:
             self.build_pareto(ctx, evolve=False)
+
+        if self._pressure > 0.0:
+            # SLO burn feedback: while the error budget is burning, the
+            # objective flips from accuracy-first to latency-first —
+            # take the *cheapest* variant on the front (local preferred)
+            # and skip hysteresis, which would otherwise defend the
+            # expensive incumbent against a <5%-gain downshift.
+            pool = ([e for e in self.front if not e.action.offload.enabled]
+                    or list(self.front))
+            cheap = min(pool, key=lambda e: (e.latency_s, e.energy_j))
+            choice = self.evaluator.evaluate(cheap.action, ctx)
+            d = Decision(tick=self._tick, ctx=ctx, action=choice.action,
+                         eval=choice, reason="slo_pressure")
+            if self.recorder.enabled:
+                self.recorder.instant(
+                    "loop.decide", pid=self.obs_pid, tid="loop",
+                    cat="fleet",
+                    args={"tick": self._tick, "reason": "slo_pressure",
+                          "pressure": self._pressure,
+                          "variant": str(choice.action.variant),
+                          "offloaded": choice.action.offload.enabled,
+                          "latency_s": choice.latency_s,
+                          "accuracy": choice.accuracy})
+            self.current = d
+            self.decisions.append(d)
+            return d
 
         # prefer local: filter offloaded actions unless local infeasible
         local = [e for e in self.front if not e.action.offload.enabled]

@@ -20,7 +20,12 @@ Since the paging PR the summary also audits **live migration**: every
 ``req.migrate`` instant is folded into a ``migrations`` list, and
 ``migrated_reprefills`` counts migrated requests that nevertheless
 showed up in a later ``engine.prefill`` — the zero-re-prefill claim,
-checked against the same trace artifact."""
+checked against the same trace artifact.
+
+The SLO tracker also lands on this timeline: ``slo_burns`` counts
+``slo.burn`` window instants and ``slo_pages`` counts ``slo.page``
+engagement edges, so a chaos report shows whether the injected faults
+actually burned the error budget."""
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -78,6 +83,8 @@ def summarize_faults(events: Sequence) -> Dict:
     decides: List[float] = []
     migrates: List[Dict] = []
     prefills: List = []     # (ts, rids) of every engine.prefill begin
+    slo_burns = 0
+    slo_pages = 0
     for e in events:
         args = e.args or {}
         if e.name == "fault.inject":
@@ -98,6 +105,10 @@ def summarize_faults(events: Sequence) -> Dict:
                              "ts_s": _ts(e)})
         elif e.name == "engine.prefill" and getattr(e, "ph", "B") == "B":
             prefills.append((_ts(e), args.get("rids") or []))
+        elif e.name == "slo.burn":
+            slo_burns += 1
+        elif e.name == "slo.page":
+            slo_pages += 1
 
     def first_after(times: Optional[List[float]], t0: float
                     ) -> Optional[float]:
@@ -145,6 +156,8 @@ def summarize_faults(events: Sequence) -> Dict:
         "migrations": migrates,
         "migrated_requests": len(migrates),
         "migrated_reprefills": reprefilled,
+        "slo_burns": slo_burns,
+        "slo_pages": slo_pages,
     }
 
 

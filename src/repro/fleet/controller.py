@@ -139,6 +139,7 @@ class FleetController:
                  retry_policy: Optional[RetryPolicy] = None,
                  recorder=NULL_RECORDER,
                  metrics: Optional[MetricsRegistry] = None,
+                 slo=None,
                  seed: int = 0):
         if step_mode not in STEP_MODES:
             raise ValueError(f"unknown step_mode {step_mode!r}; "
@@ -162,6 +163,18 @@ class FleetController:
         self._violation_counter = self.metrics.counter("fleet.violations")
         self._energy_counter = self.metrics.counter("fleet.energy_j")
         self._recal_counter = self.metrics.counter("fleet.recalibrations")
+        # ---- SLO burn-rate feedback ---------------------------------
+        # When an SLOTracker is installed, engine-backed devices feed it
+        # TTFT/TPOT observations and the wake path polls its pressure
+        # signal; pressure transitions push `set_pressure` into every
+        # device's adaptation loop and pull placement forward.  With no
+        # tracker (the default) none of this runs — SLO-healthy and
+        # tracker-free runs are bit-identical.
+        self.slo = slo
+        self._slo_pressure = 0.0
+        self._slo_counter = self.metrics.counter("fleet.slo_pressure_events")
+        if slo is not None:
+            slo.bind(clock=self._sim_now, recorder=recorder)
         self.telemetry = TelemetryStore()
         self.telemetry.recorder = recorder
         # fleet-level jit-program cache: engine-backed devices of the same
@@ -358,6 +371,10 @@ class FleetController:
             engine.pid = device_id
         d.engine = engine
         d.engine_steps = steps_per_tick
+        # SLO feed: engine-backed devices report TTFT/TPOT into the
+        # fleet's tracker (an engine with its own tracker keeps it)
+        if self.slo is not None and getattr(engine, "slo", None) is None:
+            engine.slo = self.slo
 
     def build_engine(self, device_id: str, params, *, cfg=None, slots: int = 4,
                      max_seq: int = 256, opts=None, steps_per_tick: int = 4,
@@ -878,6 +895,27 @@ class FleetController:
         self._schedule_placement(self._now)
         return affected
 
+    # -------------------------------------------------------- slo feedback --
+    def _slo_feedback(self) -> None:
+        """Poll the SLO tracker on the wake path and propagate pressure
+        transitions.  While the error budget burns (pressure > 0) every
+        device's adaptation loop flips latency-first via
+        ``set_pressure``, and on the rising edge the next placement
+        sweep is pulled forward so offload targets refresh under load.
+        Pressure is pushed only on *change*: a healthy run never calls
+        ``set_pressure`` at all, keeping it bit-identical to a
+        tracker-free run."""
+        p = self.slo.update(self._now)
+        if p == self._slo_pressure:
+            return
+        rising = self._slo_pressure == 0.0
+        self._slo_pressure = p
+        for dd in self._devices.values():
+            dd.loop.set_pressure(p)
+        if rising and p > 0.0:
+            self._slo_counter.inc()
+            self._schedule_placement(self._now)
+
     # ---------------------------------------------------------- placement --
     def _schedule_placement(self, when_s: float) -> None:
         """Pull the next re-placement wake forward to ``when_s`` (no-op
@@ -1066,6 +1104,8 @@ class FleetController:
                 # no heartbeat, no re-push (thaw_device re-pushes)
                 continue
             rec, ctx = self._advance(d, self._now)
+            if self.slo is not None:
+                self._slo_feedback()
             if self.detector is not None:
                 edge = self.detector.beat(
                     did, self._now, period_s=self._next_period(d, ctx))

@@ -51,6 +51,7 @@ def chrome_trace(recorder: TraceRecorder, clock: str = "auto") -> Dict:
     rows: List[Dict] = []
     stacks: Dict[tuple, List[Dict]] = {}    # open B rows per (pid, tid)
     last_ts: Dict[tuple, float] = {}
+    orphaned_ends = 0
     for e in events:
         if e.pid not in pids:
             pids[e.pid] = len(pids) + 1
@@ -64,6 +65,12 @@ def chrome_trace(recorder: TraceRecorder, clock: str = "auto") -> Dict:
                          "pid": pids[e.pid], "tid": tids[tkey],
                          "args": {"name": e.tid}})
         ts_s = e.sim_s if chosen == "sim" else e.wall_s
+        if e.ph == "E" and not stacks.get((e.pid, e.tid)):
+            # an END whose BEGIN aged out of a bounded ring / saturated
+            # recorder: emitting it would fail span-discipline checks,
+            # so count it instead — otherData carries the tally
+            orphaned_ends += 1
+            continue
         args = dict(e.args) if e.args else {}
         # preserve the other clock so either timebase can be recovered
         if chosen == "sim":
@@ -94,7 +101,8 @@ def chrome_trace(recorder: TraceRecorder, clock: str = "auto") -> Dict:
                          "args": {"open_at_export": True}})
     return {"traceEvents": rows, "displayTimeUnit": "ms",
             "otherData": {"clock": chosen,
-                          "dropped_events": recorder.dropped}}
+                          "dropped_events": recorder.dropped,
+                          "orphaned_ends": orphaned_ends}}
 
 
 def write_trace(recorder: TraceRecorder, path: str,

@@ -138,6 +138,25 @@ class _P2:
         idx = min(len(s) - 1, max(0, round(self.q * (len(s) - 1))))
         return s[int(idx)]
 
+    # ------------------------------------------------- (de)serialization --
+    def state(self) -> Dict[str, object]:
+        """The full marker state — restoring it resumes the estimator
+        exactly (continued observations are bit-identical)."""
+        return {"q": self.q, "n": list(self.n),
+                "heights": list(self.heights),
+                "positions": list(self.positions),
+                "desired": list(self.desired), "incr": list(self.incr)}
+
+    @classmethod
+    def from_state(cls, d: Dict[str, object]) -> "_P2":
+        est = cls(float(d["q"]))
+        est.n = list(d["n"])
+        est.heights = list(d["heights"])
+        est.positions = list(d["positions"])
+        est.desired = list(d["desired"])
+        est.incr = list(d["incr"])
+        return est
+
 
 class Histogram:
     """Streaming distribution summary: count/sum/min/max plus a P²
@@ -146,8 +165,10 @@ class Histogram:
 
     __slots__ = ("name", "count", "sum", "min", "max", "_est")
 
+    DEFAULT_QUANTILES = (0.5, 0.95, 0.99, 0.999)
+
     def __init__(self, name: str,
-                 quantiles: Iterable[float] = (0.5, 0.95, 0.99)):
+                 quantiles: Iterable[float] = DEFAULT_QUANTILES):
         self.name = name
         self.count = 0
         self.sum = 0.0
@@ -176,13 +197,41 @@ class Histogram:
                            f"tracked: {sorted(self._est)}")
         return est.estimate()
 
-    def snapshot(self) -> Dict[str, Optional[float]]:
-        out: Dict[str, Optional[float]] = {
+    def snapshot(self, state: bool = True) -> Dict[str, object]:
+        """Serializable summary.  With ``state=True`` (default) the dict
+        also carries the raw P² marker state under ``"p2"``, so
+        :meth:`from_snapshot` reconstructs an estimator that continues
+        bit-identically — the one representation SLO burn windows,
+        flight dumps, ``BENCH_*.json`` artifacts and ``check_perf.py``
+        baselines share.  ``state=False`` gives the lean summary the
+        registry embeds in bench artifacts."""
+        out: Dict[str, object] = {
             "count": self.count, "sum": self.sum,
             "mean": self.mean, "min": self.min, "max": self.max}
         for q, est in sorted(self._est.items()):
             out[f"p{q * 100:g}"] = est.estimate()
+        if state:
+            out["name"] = self.name
+            out["p2"] = [est.state() for _, est in sorted(self._est.items())]
         return out
+
+    @classmethod
+    def from_snapshot(cls, snap: Dict[str, object]) -> "Histogram":
+        """Rebuild a histogram from a stateful :meth:`snapshot` dict.
+        The restored estimator's quantile reads — and all subsequent
+        ``observe`` arithmetic — are bit-identical to the original's."""
+        p2 = snap.get("p2")
+        if p2 is None:
+            raise ValueError("snapshot carries no P² state "
+                             "(was it taken with state=False?)")
+        h = cls(str(snap.get("name", "restored")),
+                quantiles=tuple(float(d["q"]) for d in p2))
+        h.count = int(snap["count"])
+        h.sum = float(snap["sum"])
+        h.min = snap["min"]
+        h.max = snap["max"]
+        h._est = {float(d["q"]): _P2.from_state(d) for d in p2}
+        return h
 
 
 _Metric = Union[Counter, Gauge, EwmaGauge, Histogram]
@@ -219,7 +268,7 @@ class MetricsRegistry:
         return self._get(name, EwmaGauge, lambda: EwmaGauge(name, alpha))
 
     def histogram(self, name: str,
-                  quantiles: Tuple[float, ...] = (0.5, 0.95, 0.99)
+                  quantiles: Tuple[float, ...] = Histogram.DEFAULT_QUANTILES
                   ) -> Histogram:
         return self._get(name, Histogram, lambda: Histogram(name, quantiles))
 
@@ -228,8 +277,10 @@ class MetricsRegistry:
 
     def snapshot(self) -> Dict[str, object]:
         """Flat name → value view (histograms expand to their summary
-        dict) — what benchmarks serialize next to their own numbers."""
+        dict, sans marker state) — what benchmarks serialize next to
+        their own numbers."""
         out: Dict[str, object] = {}
         for name, m in sorted(self._metrics.items()):
-            out[name] = m.snapshot() if isinstance(m, Histogram) else m.value
+            out[name] = (m.snapshot(state=False) if isinstance(m, Histogram)
+                         else m.value)
         return out

@@ -69,20 +69,41 @@ def instants(rec: TraceRecorder, name: Optional[str] = None,
     return list(events(rec, name=name, ph=INSTANT, **kw))
 
 
-def spans(rec: TraceRecorder, name: Optional[str] = None,
-          cat: Optional[str] = None, pid: Optional[str] = None,
-          tid: Optional[str] = None) -> List[Span]:
-    """Pair begin/end events into :class:`Span` rows.
+@dataclass
+class PairingReport:
+    """What :func:`pair_spans` recovered from a (possibly truncated)
+    trace: the well-paired spans plus counts of edges that could not
+    pair — ``orphaned_ends`` (an END whose BEGIN was dropped at the
+    recorder's capacity ceiling or aged out of a flight ring) and
+    ``unclosed_begins`` (a BEGIN whose END was dropped / hadn't landed
+    yet).  ``truncated`` records whether the source recorder reported
+    dropped events — only then is lenient accounting legitimate."""
+    spans: List[Span]
+    orphaned_ends: int = 0
+    unclosed_begins: int = 0
+    truncated: bool = False
 
-    Pairing walks each ``(pid, tid)`` track with a stack (spans must
-    nest per track — the recording discipline the property tests pin);
-    a mismatched or dangling edge raises, because a malformed trace
-    should fail the query, not silently drop rows.  Filters apply to
-    the *paired* spans, so an enclosing span of another name never
-    hides its children."""
+
+def pair_spans(evts, dropped: int = 0,
+               strict: Optional[bool] = None) -> PairingReport:
+    """Pair begin/end events into :class:`Span` rows, walking each
+    ``(pid, tid)`` track with a stack (spans must nest per track — the
+    recording discipline the property tests pin).
+
+    On a complete trace (``dropped == 0``, the default ``strict``) a
+    mismatched or dangling edge raises, because a malformed trace
+    should fail the query, not silently drop rows.  When the recorder
+    *reported truncation* (``dropped > 0``) the same defects are an
+    expected artifact of the lost events, so pairing degrades to a
+    counted report: orphaned ENDs are skipped (never popping an
+    unrelated frame), dangling BEGINs are tallied, and every span that
+    did survive is still returned."""
+    if strict is None:
+        strict = dropped == 0
     stacks: Dict[tuple, List[Event]] = {}
     out: List[Span] = []
-    for e in rec.events:
+    orphaned = 0
+    for e in evts:
         if e.ph not in (BEGIN, END):
             continue
         key = (e.pid, e.tid)
@@ -91,21 +112,49 @@ def spans(rec: TraceRecorder, name: Optional[str] = None,
             stack.append(e)
             continue
         if not stack:
-            raise ValueError(f"end without begin: {e.name!r} on {key}")
+            if strict:
+                raise ValueError(f"end without begin: {e.name!r} on {key}")
+            orphaned += 1
+            continue
+        if stack[-1].name != e.name:
+            if strict:
+                raise ValueError(f"mis-nested spans on {key}: begin "
+                                 f"{stack[-1].name!r} closed by end "
+                                 f"{e.name!r}")
+            # the matching BEGIN was dropped; popping the (unrelated)
+            # top frame would corrupt an outer span's pairing
+            orphaned += 1
+            continue
         b = stack.pop()
-        if b.name != e.name:
-            raise ValueError(f"mis-nested spans on {key}: begin "
-                             f"{b.name!r} closed by end {e.name!r}")
         merged = dict(b.args or {})
         merged.update(e.args or {})
         out.append(Span(name=b.name, cat=b.cat, pid=b.pid, tid=b.tid,
                         wall_begin_s=b.wall_s, wall_end_s=e.wall_s,
                         sim_begin_s=b.sim_s, sim_end_s=e.sim_s,
                         args=merged))
+    unclosed = 0
     for key, stack in stacks.items():
         if stack:
-            raise ValueError(f"unclosed span(s) on {key}: "
-                             f"{[b.name for b in stack]}")
+            if strict:
+                raise ValueError(f"unclosed span(s) on {key}: "
+                                 f"{[b.name for b in stack]}")
+            unclosed += len(stack)
+    return PairingReport(spans=out, orphaned_ends=orphaned,
+                         unclosed_begins=unclosed,
+                         truncated=dropped > 0)
+
+
+def spans(rec: TraceRecorder, name: Optional[str] = None,
+          cat: Optional[str] = None, pid: Optional[str] = None,
+          tid: Optional[str] = None,
+          strict: Optional[bool] = None) -> List[Span]:
+    """Paired :class:`Span` rows (see :func:`pair_spans` for the
+    pairing/strictness contract — a saturated recorder degrades to
+    lenient pairing instead of raising on its truncation artifacts).
+    Filters apply to the *paired* spans, so an enclosing span of
+    another name never hides its children."""
+    report = pair_spans(rec.events, dropped=getattr(rec, "dropped", 0),
+                        strict=strict)
 
     def keep(s: Span) -> bool:
         return ((name is None or s.name == name)
@@ -113,7 +162,7 @@ def spans(rec: TraceRecorder, name: Optional[str] = None,
                 and (pid is None or s.pid == pid)
                 and (tid is None or s.tid == tid))
 
-    return [s for s in out if keep(s)]
+    return [s for s in report.spans if keep(s)]
 
 
 # ------------------------------------------------------ request metrics ----

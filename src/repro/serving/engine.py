@@ -316,6 +316,11 @@ class ServingEngine:
         # channel the fleet's TelemetryStore subscribes to.
         self.step_times: Deque[float] = deque(maxlen=2048)
         self.on_step: Optional[Callable[[float, int, int], None]] = None
+        # SLO feed: when a tracker is installed (the fleet controller
+        # shares its SLOTracker here), the engine reports TTFT at each
+        # request's true first token and per-token decode time per step.
+        # None (the default) keeps the hot path at one attribute load.
+        self.slo = None
         # fault plane: injected OOM failures pending at admission, and
         # the exponential admission backoff they trigger (in steps).
         # All zeros on a healthy engine — the admission hot path is
@@ -505,6 +510,8 @@ class ServingEngine:
             # keep the original stamp across swap re-admissions: TTFT is
             # submit→first token, not submit→latest re-prefill
             req.first_token_s = stamp
+            if self.slo is not None:
+                self.slo.observe("ttft", stamp - req.arrived_s)
         self.stats.prefills += 1
         self.stats.tokens_out += 1
         if self._sampling_of(req).temperature > 0:
@@ -993,6 +1000,10 @@ class ServingEngine:
         if rec.enabled:
             rec.end("engine.step", pid=self.pid, tid="engine",
                     cat="engine", wall_s=t1, args={"emitted": emitted})
+        if self.slo is not None and emitted:
+            # every active slot advanced one token this step, so the
+            # step wall time is each of those tokens' inter-token time
+            self.slo.observe("tpot", dt, n=emitted)
         if self.on_step is not None:
             self.on_step(dt, emitted, self.generation)
         return emitted

@@ -1,0 +1,387 @@
+"""Critical-path attribution, flight recorder, and perf-gate suite.
+
+* **Bit-equal decomposition** — for every attributed request,
+  ``sum(components_ns) == end_to_end_ns`` exactly (integer-ns
+  arithmetic, no float summation), across dense/per-slot/paged decode,
+  swap-driven freeze/thaw, and synthetic timelines with awkward float
+  timestamps.
+* **Component semantics** — queue waits split at ``engine.oom`` into
+  wait vs. retry backoff; same-engine freeze→thaw is ``migration``;
+  cross-engine freeze→thaw is ``offload_link``.
+* **Fleet rollup** — :func:`attribute_fleet` totals are integer sums of
+  the per-request values, so they match exactly; tier grouping and
+  dominant-component ranking are consistent with the per-device rows.
+* **Lenient pairing** — ``pair_spans`` degrades to a counted
+  :class:`PairingReport` when the recorder dropped events, and
+  ``spans()`` auto-selects lenient mode from ``rec.dropped``.
+* **Histogram snapshots** — P² marker state round-trips through
+  ``snapshot()/from_snapshot()`` and the restored estimator continues
+  bit-identically; p99.9 ships in the default quantile set.
+* **Flight recorder** — the bounded ring keeps recording past
+  saturation, trigger instants arm dumps that bracket the anomaly, and
+  every written dump validates through ``tools/check_trace.py``.
+* **Perf gate** — ``tools/check_perf.py`` ops (eq/ge/le/approx) pass
+  and fail as specified, and trajectory rows upsert by label.
+"""
+import importlib.util
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.obs import (COMPONENTS, FlightRecorder, Histogram, TraceRecorder,
+                       attribute_fleet, attribute_requests, pair_spans,
+                       spans)
+from repro.serving import CompileCache, Request, ServingEngine
+
+CFG = get_config("paper-backbone").with_updates(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=300)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+CC = CompileCache()
+
+TOOLS = Path(__file__).resolve().parents[1] / "tools"
+
+
+def _load_tool(name):
+    spec = importlib.util.spec_from_file_location(name, TOOLS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_trace = _load_tool("check_trace")
+check_perf = _load_tool("check_perf")
+
+
+def _prompt(length, rid):
+    rng = np.random.default_rng(7 * length + rid)
+    return rng.integers(0, CFG.vocab_size, size=length).astype(np.int32)
+
+
+def _run(mode, mix, swap=False, recorder=None, **eng_kw):
+    rec = recorder if recorder is not None else TraceRecorder()
+    eng = ServingEngine(CFG, PARAMS, slots=2, max_seq=64, decode_mode=mode,
+                        compile_cache=CC, recorder=rec, pid="dev0",
+                        **eng_kw)
+    reqs = [Request(rid=i, prompt=_prompt(n, i), max_new_tokens=b)
+            for i, (n, b) in enumerate(mix)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()
+    if swap:
+        eng.swap_model(CFG, PARAMS, eng.opts)
+    eng.drain()
+    return rec, eng, reqs
+
+
+def _assert_invariant(attrs):
+    for a in attrs.values():
+        assert sum(a.components_ns.values()) == a.end_to_end_ns
+        assert all(v >= 0 for v in a.components_ns.values())
+
+
+# --------------------------------------------------- engine attribution ----
+@pytest.mark.parametrize("mode", ["batched", "per_slot", "paged"])
+def test_attribution_invariant_across_decode_modes(mode):
+    mix = [(8, 4), (20, 3), (5, 6), (12, 2)]     # more rids than slots
+    rec, eng, reqs = _run(mode, mix)
+    attrs = attribute_requests(rec)
+    assert sorted(attrs) == [r.rid for r in reqs]
+    _assert_invariant(attrs)
+    for r in reqs:
+        a = attrs[r.rid]
+        assert a.complete and a.pid == "dev0"
+        # every completed request spent time somewhere
+        assert a.end_to_end_ns > 0
+        # no freeze/thaw happened: migration components stay zero
+        assert a.components_ns["migration"] == 0
+        assert a.components_ns["offload_link"] == 0
+        # the decomposition is consistent with the request's own stamps
+        assert a.end_to_end_s == pytest.approx(
+            a.component_s("queue_wait") + a.component_s("retry_backoff")
+            + a.component_s("prefill") + a.component_s("decode"))
+
+
+def test_swap_freeze_thaw_counts_as_migration_same_engine():
+    # budget outlives the first step → the swap freezes and re-queues;
+    # thaw happens on the SAME engine, so the interval is migration,
+    # never offload_link
+    rec, eng, reqs = _run("batched", [(8, 6)], swap=True)
+    attrs = attribute_requests(rec)
+    _assert_invariant(attrs)
+    assert eng.stats.thaws == 1
+    assert attrs[0].components_ns["migration"] > 0
+    assert attrs[0].components_ns["offload_link"] == 0
+
+
+def test_incomplete_requests_attribute_to_last_milestone():
+    rec = TraceRecorder()
+    eng = ServingEngine(CFG, PARAMS, slots=1, max_seq=64,
+                        compile_cache=CC, recorder=rec, pid="dev0")
+    reqs = [Request(rid=i, prompt=_prompt(6, i), max_new_tokens=10)
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                          # rid 0 decoding, rid 1 queued
+    attrs = attribute_requests(rec)
+    _assert_invariant(attrs)
+    assert not attrs[0].complete
+    # rid 1 never admitted: only its queued milestone exists, so its
+    # window is empty but still well-formed
+    assert not attrs[1].complete
+    assert attrs[1].end_to_end_ns == 0
+
+
+# ------------------------------------------------- synthetic timelines ----
+class _E:
+    def __init__(self, name, ph, pid, wall_s, **args):
+        self.name, self.ph, self.pid = name, ph, pid
+        self.wall_s, self.sim_s = wall_s, None
+        self.tid, self.cat = "t", "request"
+        self.args = args
+
+
+def test_synthetic_oom_splits_queue_wait_into_retry_backoff():
+    # awkward floats on purpose: 0.1 + 0.2 != 0.3 in float arithmetic,
+    # but the int-ns decomposition still telescopes exactly
+    evts = [
+        _E("req.queued", "i", "e0", 0.1, rid=1),
+        _E("engine.oom", "i", "e0", 0.2),
+        _E("engine.prefill", "B", "e0", 0.30000000000000004, rids=[1]),
+        _E("req.first_token", "i", "e0", 0.4, rid=1),
+        _E("req.decode", "i", "e0", 0.55, rid=1),
+        _E("req.slot", "E", "e0", 0.55, rid=1, reason="finished"),
+    ]
+    attrs = attribute_requests(evts)
+    a = attrs[1]
+    _assert_invariant(attrs)
+    assert a.complete
+    assert a.components_ns["queue_wait"] == 100_000_000
+    assert a.components_ns["retry_backoff"] == 100_000_000
+    assert a.components_ns["prefill"] == 100_000_000
+    assert a.components_ns["decode"] == 150_000_000
+    assert a.end_to_end_ns == 450_000_000
+    assert a.dominant() == "decode"
+
+
+def test_synthetic_cross_engine_thaw_is_offload_link():
+    evts = [
+        _E("req.queued", "i", "e0", 1.0, rid=3),
+        _E("engine.prefill", "B", "e0", 1.1, rids=[3]),
+        _E("req.first_token", "i", "e0", 1.2, rid=3),
+        _E("req.freeze", "i", "e0", 1.5, rid=3, reason="migrate"),
+        _E("req.thaw", "i", "e1", 2.5, rid=3),      # different engine
+        _E("req.decode", "i", "e1", 2.6, rid=3),
+        _E("req.slot", "E", "e1", 2.6, rid=3, reason="finished"),
+    ]
+    a = attribute_requests(evts)[3]
+    _assert_invariant({3: a})
+    assert a.components_ns["offload_link"] == 1_000_000_000
+    assert a.components_ns["migration"] == 0
+    assert a.dominant() == "offload_link"
+    assert a.pid == "e0"                # origin engine, not destination
+
+
+def test_fleet_rollup_totals_equal_per_request_sums():
+    mix = [(8, 4), (20, 3), (5, 6)]
+    rec, eng, reqs = _run("batched", mix)
+    attrs = attribute_requests(rec)
+    fa = attribute_fleet(rec, tiers={"dev0": "light"})
+    assert fa.fleet.requests == len(reqs)
+    for c in COMPONENTS:
+        want = sum(a.components_ns[c] for a in attrs.values())
+        assert fa.fleet.components_ns[c] == want
+        assert fa.per_device["dev0"].components_ns[c] == want
+        assert fa.per_tier["light"].components_ns[c] == want
+    assert fa.fleet.end_to_end_ns == \
+        sum(a.end_to_end_ns for a in attrs.values())
+    # ranking is the fleet components sorted by total, descending
+    ranked = [c for c, _ in fa.ranking()]
+    assert sorted(ranked) == sorted(COMPONENTS)
+    totals = [fa.fleet.components_ns[c] for c in ranked]
+    assert totals == sorted(totals, reverse=True)
+    # tail stats: p95 row is one of the observed end-to-ends and the
+    # tail dominant maps to a real layer
+    e2es = {a.end_to_end_ns for a in attrs.values()}
+    assert fa.fleet.tail_p95_ns in e2es
+    assert fa.fleet.tail_dominant_layer in ("request", "engine", "fleet",
+                                            "placement")
+    d = fa.to_dict()
+    assert d["fleet"]["requests"] == len(reqs)
+
+
+# ------------------------------------------------------ lenient pairing ----
+def test_pair_spans_strict_raises_lenient_counts():
+    rec = TraceRecorder()
+    rec.end("ghost", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec.begin("open", pid="p", tid="t", cat="engine", wall_s=2.0)
+    # a pristine recorder (dropped == 0) keeps the hard contract
+    with pytest.raises(ValueError):
+        spans(rec)
+    # explicit lenient mode counts instead of raising
+    rep = pair_spans(rec.events, dropped=0, strict=False)
+    assert rep.orphaned_ends == 1
+    assert rep.unclosed_begins == 1
+    assert not rep.truncated
+    assert rep.spans == []
+    # a saturated recorder flips spans() to lenient automatically
+    rec.dropped = 3
+    assert spans(rec) == []
+    rep2 = pair_spans(rec.events, dropped=rec.dropped)
+    assert rep2.truncated and rep2.orphaned_ends == 1
+
+
+def test_pair_spans_lenient_name_mismatch_never_pops_unrelated_frame():
+    rec = TraceRecorder()
+    rec.begin("outer", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec.end("other", pid="p", tid="t", cat="engine", wall_s=2.0)
+    rec.end("outer", pid="p", tid="t", cat="engine", wall_s=3.0)
+    rep = pair_spans(rec.events, strict=False)
+    # the mismatched end is an orphan; "outer" still pairs with its own
+    assert rep.orphaned_ends == 1
+    assert [s.name for s in rep.spans] == ["outer"]
+    assert rep.unclosed_begins == 0
+
+
+# -------------------------------------------------- histogram snapshots ----
+def test_histogram_snapshot_roundtrip_continues_bit_identically():
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(mean=-5.0, sigma=1.0, size=500)
+    h1 = Histogram("h")
+    for x in xs[:300]:
+        h1.observe(float(x))
+    snap = h1.snapshot()
+    assert snap["count"] == 300 and "p99.9" in snap and "p2" in snap
+    h2 = Histogram.from_snapshot(snap)
+    assert h2.count == h1.count and h2.sum == h1.sum
+    assert h2.min == h1.min and h2.max == h1.max
+    for x in xs[300:]:
+        h1.observe(float(x))
+        h2.observe(float(x))
+    for q in Histogram.DEFAULT_QUANTILES:
+        assert h1.quantile(q) == h2.quantile(q)     # exact, not approx
+    # stateless summaries (what bench artifacts embed) don't round-trip
+    with pytest.raises(ValueError):
+        Histogram.from_snapshot(h1.snapshot(state=False))
+
+
+def test_default_quantiles_include_p999():
+    assert 0.999 in Histogram.DEFAULT_QUANTILES
+    h = Histogram("h")
+    for i in range(2000):
+        h.observe(float(i))
+    assert h.quantile(0.999) > h.quantile(0.95)
+    assert h.snapshot(state=False)["p99.9"] is not None
+
+
+# ------------------------------------------------------ flight recorder ----
+def test_flight_ring_keeps_recording_and_dumps_validate(tmp_path):
+    rec = FlightRecorder(capacity=64, window_s=60.0, post_roll_s=0.0,
+                         triggers=("engine.oom",))
+    # saturate the ring: far more events than capacity
+    for i in range(200):
+        rec.instant("tick", pid="p", tid="t", cat="engine",
+                    wall_s=float(i), args={"i": i})
+    assert len(rec.events) == 64
+    assert rec.dropped == 200 - 64
+    # the trigger arms a dump; the next event finalizes it (post-roll 0)
+    rec.instant("engine.oom", pid="p", tid="t", cat="engine", wall_s=200.0,
+                args={"queued": 3})
+    rec.instant("tick", pid="p", tid="t", cat="engine", wall_s=201.0)
+    dumps = rec.flush()
+    assert len(dumps) == 1
+    d = dumps[0]
+    assert d["anomaly"] == "engine.oom" and d["events"] > 0
+    # truncation is honest: ring evictions + window-clipped events
+    assert d["trace"]["otherData"]["dropped_events"] >= rec.dropped
+    paths = rec.write_dumps(str(tmp_path))
+    assert len(paths) == 1 and "engine_oom" in paths[0]
+    # the dump validates under the CI trace checker (truncation only
+    # FLAGs, never fails)
+    assert check_trace.check(Path(paths[0])) == 0
+
+
+def test_flight_recorder_with_real_engine_spans(tmp_path):
+    rec = FlightRecorder(capacity=16, window_s=60.0, post_roll_s=0.0)
+    _run("batched", [(8, 4), (16, 3), (5, 5)], recorder=rec)
+    assert rec.dropped > 0              # the tiny ring saturated
+    # span queries degrade to lenient pairing instead of raising
+    spans(rec)
+    dump = rec.snapshot(anomaly="manual.end_of_run")
+    assert dump["events"] == len(rec.events)
+    paths = rec.write_dumps(str(tmp_path))
+    assert all(check_trace.check(Path(p)) == 0 for p in paths)
+
+
+def test_flight_max_dumps_bounds_capture():
+    rec = FlightRecorder(capacity=32, post_roll_s=0.0, max_dumps=2,
+                         triggers=("boom",))
+    for i in range(6):
+        rec.instant("boom", pid="p", tid="t", cat="fleet", wall_s=float(i))
+    rec.instant("tick", pid="p", tid="t", cat="fleet", wall_s=10.0)
+    assert len(rec.flush()) == 2
+
+
+# ------------------------------------------------------------ perf gate ----
+def test_check_perf_ops_and_missing_paths(tmp_path):
+    art = {"a": {"speed": 2.0, "ok": True, "count": 0}}
+    (tmp_path / "BENCH_x.json").write_text(json.dumps(art))
+    base = tmp_path / "baselines.json"
+
+    def gate(checks):
+        base.write_text(json.dumps({"checks": checks}))
+        return check_perf.run_checks(tmp_path, base)
+
+    passed, failed = gate([
+        {"file": "BENCH_x.json", "path": "a.ok", "op": "eq", "expect": True},
+        {"file": "BENCH_x.json", "path": "a.count", "op": "eq", "expect": 0},
+        {"file": "BENCH_x.json", "path": "a.speed", "op": "ge", "expect": 1.5},
+        {"file": "BENCH_x.json", "path": "a.speed", "op": "le", "expect": 2.5},
+        {"file": "BENCH_x.json", "path": "a.speed", "op": "approx",
+         "expect": 2.1, "tol": 0.1},
+    ])
+    assert len(passed) == 5 and not failed
+    _, failed = gate([
+        {"file": "BENCH_x.json", "path": "a.speed", "op": "ge", "expect": 3.0},
+        {"file": "BENCH_x.json", "path": "a.speed", "op": "approx",
+         "expect": 4.0, "tol": 0.05},
+        {"file": "BENCH_x.json", "path": "a.nope", "op": "eq", "expect": 1},
+        {"file": "BENCH_missing.json", "path": "a", "op": "eq", "expect": 1},
+    ])
+    assert len(failed) == 4
+    assert any("path missing" in m for m in failed)
+    assert any("artifact missing" in m for m in failed)
+
+
+def test_repo_baselines_pass_against_committed_artifacts():
+    root = Path(__file__).resolve().parents[1]
+    passed, failed = check_perf.run_checks(
+        root, root / "benchmarks" / "baselines.json")
+    assert not failed, failed
+    assert passed
+
+
+def test_trajectory_upserts_by_label(tmp_path):
+    art = {"slots": {"4": {"batched": {"tokens_per_s": 100.0},
+                           "speedup": 2.0}},
+           "bit_identical": True,
+           "obs_overhead": {"overhead_factor": 1.01}}
+    (tmp_path / "BENCH_serving.json").write_text(json.dumps(art))
+    traj = tmp_path / "BENCH_trajectory.json"
+    e1 = check_perf.trajectory_entry(tmp_path, "pr1")
+    assert e1["serving"]["tokens_per_s_slots4"] == 100.0
+    assert e1["serving"]["bit_identical"] is True
+    assert e1["paging"]["bit_identical"] is None    # artifact absent: sparse
+    check_perf.append_trajectory(traj, e1)
+    check_perf.append_trajectory(traj, check_perf.trajectory_entry(
+        tmp_path, "pr2"))
+    # re-running a label replaces its row instead of duplicating it
+    check_perf.append_trajectory(traj, check_perf.trajectory_entry(
+        tmp_path, "pr1"))
+    doc = json.loads(traj.read_text())
+    assert [e["label"] for e in doc["entries"]] == ["pr2", "pr1"]

@@ -46,7 +46,8 @@ from repro.faults import (CRASH, FREEZE, SILENT_KINDS, ChainOutcome,
 from repro.fleet import FleetController, make_device
 from repro.models.configs import InputShape
 from repro.models.model import init_params
-from repro.obs import LAYERS, TraceRecorder, write_trace
+from repro.obs import (LAYERS, TraceRecorder, attribute_fleet,
+                       attribute_requests, write_trace)
 from repro.serving import CompileCache, Request, ServingEngine
 
 try:
@@ -478,6 +479,27 @@ def test_injected_crash_migrates_in_flight_requests_exactly(tmp_path):
     path = tmp_path / "migration.json"
     write_trace(rec, str(path))
     assert check_trace.check(path, require_layers=LAYERS) == 0
+    # critical-path attribution over the same trace: the components of
+    # every request sum bit-equal to its span-derived end-to-end
+    # latency, and the migrated rids carry a nonzero offload_link
+    # component (freeze on src, thaw on a *different* engine = the
+    # frozen blob crossing a link)
+    attrs = attribute_requests(rec)
+    assert sorted(attrs) == [0, 1, 2, 3]
+    for a in attrs.values():
+        assert sum(a.components_ns.values()) == a.end_to_end_ns
+        assert a.complete and a.pid == src_id
+    for rid in (0, 1):                  # frozen mid-decode, thawed on dst
+        assert attrs[rid].components_ns["offload_link"] > 0
+    # fleet rollup totals are exactly the per-request integer sums
+    fa = attribute_fleet(rec)
+    assert fa.fleet.requests == 4
+    for c in fa.fleet.components_ns:
+        assert fa.fleet.components_ns[c] == \
+            sum(a.components_ns[c] for a in attrs.values())
+    assert fa.fleet.end_to_end_ns == \
+        sum(a.end_to_end_ns for a in attrs.values())
+    assert fa.per_device[src_id].requests == 4
 
 
 def test_eviction_without_peer_requeues_locally_nothing_lost():

@@ -27,6 +27,8 @@
   token streams are bit-identical with tracing on and off.
 """
 import importlib.util
+import json
+import time
 from pathlib import Path
 
 import jax
@@ -34,13 +36,14 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
+from repro.core.monitor import ResourceContext
 from repro.fleet import FleetController, build_fleet, fleet_report
 from repro.models.configs import InputShape
 from repro.models.model import init_params
 from repro.obs import (LAYERS, NULL_RECORDER, EwmaGauge, Histogram,
-                       MetricsRegistry, TraceRecorder, chrome_trace,
-                       instants, request_token_counts, request_ttft_s,
-                       spans, write_trace)
+                       MetricsRegistry, SLOClass, SLOTracker, TraceRecorder,
+                       chrome_trace, instants, request_token_counts,
+                       request_ttft_s, spans, write_trace)
 from repro.serving import CompileCache, Request, ServingEngine
 
 try:
@@ -309,3 +312,157 @@ def test_fleet_trace_all_layers_one_sim_timebase(tmp_path):
     # the trace as a placement.decide instant
     assert len(ctl.placer.audits) == len(
         instants(rec, name="placement.decide"))
+
+
+# ------------------------------------------------------ exporter edges ----
+def test_exporter_auto_clock_mixed_events_and_sim_raise():
+    rec = TraceRecorder()
+    rec.instant("a", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec.sim_clock = lambda: 5.0          # later events carry a sim stamp
+    rec.instant("b", pid="p", tid="t", cat="engine", wall_s=2.0)
+    # mixed sim/wall: "auto" must fall back to the wall clock (one
+    # timeline, one timebase — never a mix)
+    doc = chrome_trace(rec)
+    assert doc["otherData"]["clock"] == "wall"
+    with pytest.raises(ValueError):
+        chrome_trace(rec, clock="sim")
+    # the event that does carry a sim stamp preserves it in args
+    rows = [r for r in doc["traceEvents"] if r["ph"] == "i"]
+    assert rows[1]["args"]["sim_s"] == 5.0
+    assert "args" not in rows[0]
+
+
+def test_open_at_export_and_orphan_ends_roundtrip_check_trace(tmp_path):
+    rec = TraceRecorder()
+    rec.begin("outer", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec.begin("inner", pid="p", tid="t", cat="engine", wall_s=2.0)
+    rec.instant("tick", pid="p", tid="t", cat="engine", wall_s=3.0)
+    path = tmp_path / "dangling.json"
+    write_trace(rec, str(path))
+    assert check_trace.check(path) == 0      # synthetic ends validate
+    doc = json.loads(path.read_text())
+    ends = [e for e in doc["traceEvents"] if e["ph"] == "E"]
+    assert len(ends) == 2
+    assert all(e["args"]["open_at_export"] for e in ends)
+    # inner closes before outer (reverse stack order), both at last ts
+    assert [e["name"] for e in ends] == ["inner", "outer"]
+    # an END whose BEGIN never existed is skipped and counted, so even
+    # that malformed recorder exports a validating document
+    rec2 = TraceRecorder()
+    rec2.end("ghost", pid="p", tid="t", cat="engine", wall_s=1.0)
+    rec2.instant("tick", pid="p", tid="t", cat="engine", wall_s=2.0)
+    doc2 = chrome_trace(rec2)
+    assert doc2["otherData"]["orphaned_ends"] == 1
+    assert not [e for e in doc2["traceEvents"] if e["ph"] == "E"]
+    path2 = tmp_path / "orphan.json"
+    path2.write_text(json.dumps(doc2))
+    assert check_trace.check(path2) == 0
+
+
+# -------------------------------------------------------- slo feedback ----
+SHAPE = InputShape("obs_t", 128, 2, "decode")
+
+
+def _slo_fleet(slo, cc, *, backlog_s=None, n_req=4, budget=6):
+    """A placement-free fleet with one engine-backed light device.  With
+    ``backlog_s`` the submitted requests claim to have arrived that far
+    in the past — a deterministic load spike: their TTFTs are at least
+    ``backlog_s`` regardless of machine speed."""
+    fleet = build_fleet(5, seed=0)
+    rec = TraceRecorder()
+    ctl = FleetController(fleet, CFG, SHAPE, trace_ticks=400,
+                          warmup_ticks=2, recorder=rec, compile_cache=cc,
+                          slo=slo)
+    dev = next(d for d in fleet if d.tier == "light")
+    eng = ctl.build_engine(dev.device_id, PARAMS, cfg=CFG, slots=2,
+                           max_seq=64, steps_per_tick=2)
+    reqs = [Request(rid=i, prompt=_prompt(6 + i, i), max_new_tokens=budget)
+            for i in range(n_req)]
+    if backlog_s is not None:
+        now = time.perf_counter()
+        for r in reqs:
+            r.arrived_s = now - backlog_s
+    for r in reqs:
+        eng.submit(r)
+    ctl.run_for(4.0)
+    eng.drain()
+    return [tuple(r.generated) for r in reqs], eng, ctl, rec, dev.device_id
+
+
+def test_slo_spike_pages_and_downshifts_within_two_wakes():
+    # TTFT target 1s against a 10s backlog: the very first window burns
+    # at 1/(1-0.95) = 20x, far past the page threshold (min_count=2:
+    # the two engine slots admit two backlogged requests on the first
+    # wake, which is all the evidence this spike needs)
+    slo = SLOTracker(SLOClass(name="interactive", ttft_p95_s=1.0),
+                     window_s=30.0, min_count=2)
+    _, eng, ctl, rec, pid = _slo_fleet(slo, CompileCache(), backlog_s=10.0)
+    assert eng.slo is slo                 # controller shared its tracker
+    pages = instants(rec, name="slo.page")
+    assert len(pages) == 1 and pages[0].args["burn"] > 1.0
+    assert slo.pressure > 1.0             # long window: never released
+    assert ctl.metrics.counter("fleet.slo_pressure_events").value == 1
+    t_page = pages[0].sim_s
+    # every device's FIRST decision after the page is the latency-first
+    # downshift — pressure propagated within one wake of paging
+    decides = instants(rec, name="loop.decide")
+    after = {}
+    for e in decides:
+        if e.sim_s > t_page:
+            after.setdefault(e.pid, e)
+    assert after, "no fleet wakes after the page"
+    for pid_, first in after.items():
+        assert first.args["reason"] == "slo_pressure", \
+            f"{pid_} first post-page decision was {first.args['reason']}"
+        assert first.args["pressure"] > 1.0
+    # the downshift is real: under a nominal context the pressure-picked
+    # action is no slower than the device's last healthy choice
+    loop = ctl._devices[pid].loop
+    healthy = [d for d in loop.decisions if d.reason != "slo_pressure"]
+    pressed = [d for d in loop.decisions if d.reason == "slo_pressure"]
+    assert healthy and pressed
+    nominal = ResourceContext()
+
+    def raw_latency(d):
+        return loop.evaluator.evaluate(d.action, nominal,
+                                       calibrate=False).latency_s
+
+    assert raw_latency(pressed[-1]) <= raw_latency(healthy[-1])
+    # the burn window and page both landed on the fault/SLO report
+    from repro.faults import summarize_faults
+    summ = summarize_faults(rec.events)
+    assert summ["slo_pages"] == 1
+
+
+def test_slo_healthy_run_bit_identical_to_untracked_and_no_recompiles():
+    cc = CompileCache()
+    warm, _, _, _, _ = _slo_fleet(None, cc)          # compile everything
+    base, base_eng, _, base_rec, _ = _slo_fleet(None, cc)
+    assert base == warm
+    slo = SLOTracker(SLOClass(ttft_p95_s=1e3, tpot_p95_s=1e3))
+    got, eng, ctl, rec, pid = _slo_fleet(slo, cc)
+    # bit-identical token streams, and the warm cache stayed warm: the
+    # feedback path compiled nothing and decided nothing differently
+    assert got == base
+    assert eng.stats.recompiles == 0 and base_eng.stats.recompiles == 0
+    assert slo.pressure == 0.0
+    assert not instants(rec, name="slo.page")
+    assert not instants(rec, name="slo.burn")
+    assert ctl.metrics.counter("fleet.slo_pressure_events").value == 0
+    assert not any(d.reason == "slo_pressure"
+                   for dd in ctl._devices.values()
+                   for d in dd.loop.decisions)
+    # the tracker did observe the healthy traffic (it wasn't bypassed);
+    # the 4s horizon rotated several 1s windows, so count across the
+    # closed-window history plus the live window
+    ttft = sum(w["counts"]["ttft"] for w in slo.history)
+    tpot = sum(w["counts"]["tpot"] for w in slo.history)
+    if slo._live is not None:
+        ttft += slo._live.counts["ttft"]
+        tpot += slo._live.counts["tpot"]
+    assert ttft >= 2 and tpot > 0
+    assert all(w["burn"] == 0.0 for w in slo.history)
+    # tracker state serializes with full histogram marker state
+    state = slo.state()
+    assert state["pressure"] == 0.0
+    json.dumps(state)                      # fully serializable

@@ -1,0 +1,202 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over the ``BENCH_*.json`` artifacts.
+
+``benchmarks/baselines.json`` pins a list of checks, each naming an
+artifact file, a dotted path into its JSON, a comparison op and an
+expected value:
+
+* ``eq``     — exact equality (bools, counts, strings: the invariants
+  the benches promise, e.g. ``bit_identical`` or zero recompiles);
+* ``ge``/``le`` — one-sided floors/ceilings for ratios and rates that
+  must not regress (conservative: they hold for both ``--quick`` CI
+  regeneration and the committed full-mode artifacts);
+* ``approx`` — two-sided band ``|v - expect| <= tol * |expect|``
+  (``tol`` defaults to 0.25) for values that should stay put.
+
+The same module owns the **perf trajectory**: ``trajectory_entry``
+folds the current artifacts into one labelled row of headline numbers
+and ``append_trajectory`` upserts it into ``BENCH_trajectory.json``
+(rows are keyed by label, so re-running a PR's summary replaces its row
+instead of duplicating it; no wall-clock stamps, so the file is
+deterministic for a given set of artifacts).
+
+  python tools/check_perf.py                       # gate (CI runs this)
+  python tools/check_perf.py --list                # show every check
+  PYTHONPATH=src python -m benchmarks.run --summary-only --label pr9
+
+No dependencies; exits non-zero listing every violated check, the same
+contract as ``check_trace.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINES = Path(__file__).resolve().parents[1] / "benchmarks" \
+    / "baselines.json"
+TRAJECTORY = "BENCH_trajectory.json"
+OPS = ("eq", "ge", "le", "approx")
+
+
+def get_path(doc, dotted: str):
+    """Resolve a dotted path (``slots.4.speedup``) into a JSON doc.
+    Dict keys are matched as strings; list hops take integer indices.
+    Raises ``KeyError`` naming the full path on any miss."""
+    cur = doc
+    for part in dotted.split("."):
+        if isinstance(cur, dict):
+            if part not in cur:
+                raise KeyError(dotted)
+            cur = cur[part]
+        elif isinstance(cur, list):
+            try:
+                cur = cur[int(part)]
+            except (ValueError, IndexError):
+                raise KeyError(dotted)
+        else:
+            raise KeyError(dotted)
+    return cur
+
+
+def check_one(root: Path, chk: dict):
+    """Evaluate one baseline check; returns (ok, message)."""
+    fname, dotted = chk["file"], chk["path"]
+    op, expect = chk["op"], chk["expect"]
+    if op not in OPS:
+        return False, f"{fname}:{dotted}: unknown op {op!r}"
+    path = root / fname
+    if not path.exists():
+        return False, f"{fname}: artifact missing (run the bench first)"
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError) as e:
+        return False, f"{fname}: unreadable ({e})"
+    try:
+        v = get_path(doc, dotted)
+    except KeyError:
+        return False, f"{fname}:{dotted}: path missing from artifact"
+    if op == "eq":
+        ok = v == expect
+        want = f"== {expect!r}"
+    elif op == "ge":
+        ok = isinstance(v, (int, float)) and v >= expect
+        want = f">= {expect!r}"
+    elif op == "le":
+        ok = isinstance(v, (int, float)) and v <= expect
+        want = f"<= {expect!r}"
+    else:  # approx
+        tol = chk.get("tol", 0.25)
+        ok = (isinstance(v, (int, float))
+              and abs(v - expect) <= tol * abs(expect))
+        want = f"~= {expect!r} (tol {tol:g})"
+    return ok, f"{fname}:{dotted} = {v!r} (want {want})"
+
+
+def run_checks(root: Path, baselines: Path):
+    """Run every baseline check; returns (passed, failed) message lists."""
+    doc = json.loads(baselines.read_text(encoding="utf-8"))
+    passed, failed = [], []
+    for chk in doc["checks"]:
+        ok, msg = check_one(root, chk)
+        (passed if ok else failed).append(msg)
+    return passed, failed
+
+
+# ------------------------------------------------------- trajectory ----
+def _maybe(root: Path, fname: str, *dotted_paths: str):
+    """Pull values out of an artifact, ``None``-filling anything absent
+    (a missing artifact yields all-``None`` — the trajectory row still
+    lands, just sparse)."""
+    path = root / fname
+    if not path.exists():
+        return [None] * len(dotted_paths)
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, json.JSONDecodeError):
+        return [None] * len(dotted_paths)
+    out = []
+    for d in dotted_paths:
+        try:
+            out.append(get_path(doc, d))
+        except KeyError:
+            out.append(None)
+    return out
+
+
+def trajectory_entry(root: Path, label: str) -> dict:
+    """One labelled row of headline numbers from the current artifacts
+    (the fields documented in README's BENCH_trajectory.json table)."""
+    s_tps, s_speedup, s_bit, s_obs = _maybe(
+        root, "BENCH_serving.json",
+        "slots.4.batched.tokens_per_s", "slots.4.speedup",
+        "bit_identical", "obs_overhead.overhead_factor")
+    p_ratio, p_ttft, p_bit = _maybe(
+        root, "BENCH_paging.json",
+        "differential.paged_over_dense_throughput",
+        "prefix_admission.ttft_speedup", "differential.bit_identical")
+    pl_speedup, pl_viol = _maybe(
+        root, "BENCH_placement.json",
+        "phone_p95.p95_speedup", "phone_p95.fleet_violations")
+    f_goodput, f_mttd, f_mttr = _maybe(
+        root, "BENCH_faults.json",
+        "goodput.ratio", "detection.mean_mttd_s", "detection.mean_mttr_s")
+    fl_v1, fl_v2 = _maybe(
+        root, "BENCH_fleet.json",
+        "violations.first_half", "violations.second_half")
+    return {
+        "label": label,
+        "serving": {"tokens_per_s_slots4": s_tps,
+                    "batched_speedup_slots4": s_speedup,
+                    "bit_identical": s_bit,
+                    "obs_overhead_factor": s_obs},
+        "paging": {"paged_over_dense_throughput": p_ratio,
+                   "prefix_ttft_speedup": p_ttft,
+                   "bit_identical": p_bit},
+        "placement": {"phone_p95_speedup": pl_speedup,
+                      "fleet_violations": pl_viol},
+        "faults": {"goodput_ratio": f_goodput,
+                   "mean_mttd_s": f_mttd, "mean_mttr_s": f_mttr},
+        "fleet": {"violations_first_half": fl_v1,
+                  "violations_second_half": fl_v2},
+    }
+
+
+def append_trajectory(path: Path, entry: dict) -> dict:
+    """Upsert ``entry`` into the trajectory file by label; returns the
+    full document written."""
+    doc = {"entries": []}
+    if path.exists():
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    entries = [e for e in doc.get("entries", [])
+               if e.get("label") != entry["label"]]
+    entries.append(entry)
+    doc = {"entries": entries}
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n",
+                    encoding="utf-8")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baselines", default=str(DEFAULT_BASELINES),
+                    help="baseline checks file")
+    ap.add_argument("--root", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--list", action="store_true",
+                    help="print every check result, not just failures")
+    args = ap.parse_args(argv)
+    passed, failed = run_checks(Path(args.root), Path(args.baselines))
+    if args.list:
+        for msg in passed:
+            print(f"ok      {msg}")
+    for msg in failed:
+        print(f"BAD     {msg}")
+    print(f"checked {len(passed) + len(failed)} baselines: "
+          f"{'FAIL' if failed else 'ok'} ({len(failed)} regressions)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,10 @@ Checks, in order:
   bare integers;
 * span discipline: ``B``/``E`` balance per ``(pid, tid)`` track with
   matching names (the recorder's well-nesting contract), and ``ts`` is
-  non-decreasing within each track;
+  non-decreasing within each track.  When ``otherData.dropped_events``
+  is non-zero (a saturated recorder or a flight-recorder ring) span
+  discipline degrades to FLAG lines: the truncation explains missing
+  begins/ends, so they are reported but don't fail the check;
 * ``--require-layers a,b`` additionally asserts that events of each
   listed ``cat`` are present (the repo's four layers are ``request``,
   ``engine``, ``fleet``, ``placement``).
@@ -38,6 +41,7 @@ PHASES = ("B", "E", "i", "C", "M")
 
 def check(path: Path, require_layers=()) -> int:
     problems = []
+    flags = []
     try:
         doc = json.loads(path.read_text(encoding="utf-8"))
     except (OSError, json.JSONDecodeError) as e:
@@ -50,6 +54,11 @@ def check(path: Path, require_layers=()) -> int:
         return 1
     if not isinstance(doc.get("otherData", {}).get("clock"), str):
         problems.append("otherData.clock missing (which timebase is ts on?)")
+    dropped = doc.get("otherData", {}).get("dropped_events", 0) or 0
+    truncated = bool(dropped)
+    # a truncated trace legitimately loses begins/ends; span-discipline
+    # problems become flags (reported, non-fatal) instead of failures
+    span_problems = flags if truncated else problems
 
     named_pids, named_tids = set(), set()
     seen_pids, seen_tids = set(), set()
@@ -94,18 +103,18 @@ def check(path: Path, require_layers=()) -> int:
         elif ph == "E":
             stack = stacks.setdefault(key, [])
             if not stack:
-                problems.append(f"{where}: end without begin "
-                                f"({e['name']!r} on track {key})")
+                span_problems.append(f"{where}: end without begin "
+                                     f"({e['name']!r} on track {key})")
             elif stack[-1] != e["name"]:
-                problems.append(f"{where}: mis-nested on track {key} "
-                                f"(begin {stack[-1]!r} closed by end "
-                                f"{e['name']!r})")
+                span_problems.append(f"{where}: mis-nested on track {key} "
+                                     f"(begin {stack[-1]!r} closed by end "
+                                     f"{e['name']!r})")
                 stack.pop()
             else:
                 stack.pop()
     for key, stack in stacks.items():
         if stack:
-            problems.append(f"unclosed span(s) on track {key}: {stack}")
+            span_problems.append(f"unclosed span(s) on track {key}: {stack}")
     for pid in seen_pids - named_pids:
         problems.append(f"pid {pid} has no process_name metadata")
     for key in seen_tids - named_tids:
@@ -117,10 +126,14 @@ def check(path: Path, require_layers=()) -> int:
 
     for p in problems:
         print(f"BAD     {path.name}: {p}")
+    for f in flags:
+        print(f"FLAG    {path.name}: {f}")
     n = sum(1 for e in events if isinstance(e, dict) and e.get("ph") != "M")
+    trunc = f", truncated: {dropped} dropped" if truncated else ""
     print(f"checked {path.name}: {'FAIL' if problems else 'ok'} "
           f"({n} events, {len(seen_pids)} processes, "
-          f"{len(seen_tids)} tracks, {len(problems)} problems)")
+          f"{len(seen_tids)} tracks, {len(problems)} problems, "
+          f"{len(flags)} flags{trunc})")
     return 1 if problems else 0
 
 
