@@ -1,8 +1,12 @@
 from . import ops, ref
-from .act_quant import act_dequant, act_quant, act_quant4
+from .act_quant import (act_dequant, act_dequant4, act_quant, act_quant4,
+                        kv_dequant_rows, kv_quant_rows)
 from .flash_attn import flash_attention
 from .fused_ffn import fused_ffn
+from .paged_decode_attn import paged_decode_attention
 from .ssd_scan import ssd_scan
 
-__all__ = ["ops", "ref", "act_dequant", "act_quant", "act_quant4", "flash_attention",
-           "fused_ffn", "ssd_scan"]
+__all__ = ["ops", "ref", "act_dequant", "act_dequant4", "act_quant",
+           "act_quant4", "kv_dequant_rows", "kv_quant_rows",
+           "flash_attention", "fused_ffn", "paged_decode_attention",
+           "ssd_scan"]

@@ -81,7 +81,14 @@ def act_dequant(q: jax.Array, scales: jax.Array, *, out_dtype=jnp.bfloat16,
 
 
 def _act_quant4_kernel(x_ref, q_ref, s_ref):
-    """int4 variant: two 4-bit values packed per uint8 byte."""
+    """int4 variant: two 4-bit values packed per uint8 byte.
+
+    The code range is the *symmetric* [-7, 7]: the -8 point is deliberately
+    unused so negation round-trips inside the code space and one amax/7
+    scale serves both signs (using -8 would need an asymmetric scale or
+    clip +amax harder than -amax).  Codes are stored biased by +8 into
+    [1, 15], little-nibble-first: byte j = col 2j | (col 2j+1 << 4).
+    ``_act_dequant4_kernel`` pins this layout exactly."""
     x = x_ref[...].astype(jnp.float32)               # (bm, bn)
     bm, bn = x.shape
     xb = x.reshape(bm, bn // QBLOCK, QBLOCK)
@@ -117,3 +124,64 @@ def act_quant4(x: jax.Array, *, block_m: int = 256, block_n: int = 512,
         ],
         interpret=interpret,
     )(x)
+
+
+def _act_dequant4_kernel(q_ref, s_ref, o_ref, *, out_dtype):
+    """Inverse of ``_act_quant4_kernel``: unpack the nibbles (low nibble =
+    even column), un-bias to [-7, 7] and rescale per 128-lane block."""
+    packed = q_ref[...]                              # (bm, bn // 2) uint8
+    bm, half = packed.shape
+    bn = half * 2
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(bm, bn).astype(jnp.float32)
+    s = s_ref[...]
+    xb = q.reshape(bm, bn // QBLOCK, QBLOCK) * s[..., None]
+    o_ref[...] = xb.reshape(bm, bn).astype(out_dtype)
+
+
+def act_dequant4(packed: jax.Array, scales: jax.Array, *,
+                 out_dtype=jnp.bfloat16, block_m: int = 256,
+                 block_n: int = 512, interpret: bool = False) -> jax.Array:
+    """packed: (M, N/2) uint8 from ``act_quant4``; scales: (M, N/128)
+    -> (M, N) in ``out_dtype``.  Pack→unpack round-trips the int4 codes
+    exactly (the symmetric [-7, 7] range survives the +8 bias)."""
+    m, half = packed.shape
+    n = half * 2
+    bm, bn = min(block_m, m), min(block_n, n)
+    assert m % bm == 0 and n % bn == 0 and bn % QBLOCK == 0, (m, n, bm, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_act_dequant4_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn // QBLOCK), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(packed, scales)
+
+
+# ----------------------------------------------------- paged-KV helpers ----
+def kv_quant_rows(x: jax.Array):
+    """Per-row symmetric int8 quantization for paged-KV storage.
+
+    ``x``: (..., kvh, hd) — one KV row (one token, all kv heads) per
+    leading index.  One f32 scale per row (amax over the trailing
+    (kvh, hd)) keeps the pool's scale leaves tiny — bs floats per block —
+    while the row is the natural append granularity of the decode step.
+    Returns (q int8 same shape, scale f32 with the last two dims gone)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = amax / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale[..., None, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def kv_dequant_rows(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16
+                    ) -> jax.Array:
+    """Inverse of ``kv_quant_rows``: q (..., kvh, hd) int8 with per-row
+    scale (...) -> (..., kvh, hd) in ``dtype``."""
+    return (q.astype(jnp.float32) * scale[..., None, None]).astype(dtype)

@@ -25,8 +25,8 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  causal: bool, window: int, block_q: int, block_k: int,
-                  num_k_blocks: int, scale: float):
+                  causal: bool, window: int, kv_len: int, block_q: int,
+                  block_k: int, num_k_blocks: int, scale: float):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -50,11 +50,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         mask &= rows >= cols
     if window:
         mask &= cols > rows - window
+    if kv_len is not None:
+        mask &= cols < kv_len
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
+    # A fully-masked row has m_new == NEG_INF, where exp(s - m_new) would
+    # be exp(0) == 1 for every masked key; force those rows to contribute
+    # nothing so they finalize to exactly zero.  exp(m_prev - m_new) is
+    # exp(0) == 1 on that path, which correctly preserves the (zero)
+    # running state.
+    p = jnp.where(m_new == NEG_INF, 0.0, jnp.exp(s - m_new))
     corr = jnp.exp(m_prev - m_new)
     l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
     acc_scr[...] = acc_scr[...] * corr + p @ v
@@ -68,17 +75,24 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
+                    kv_len: int | None = None,
                     block_q: int = 256, block_k: int = 256,
                     interpret: bool = False) -> jax.Array:
-    """q,k,v: (BH, S, hd) (kv heads pre-broadcast to q heads) -> (BH, S, hd)."""
+    """q,k,v: (BH, S, hd) (kv heads pre-broadcast to q heads) -> (BH, S, hd).
+
+    ``kv_len`` (static) masks keys at positions >= kv_len — for padded /
+    partially-filled KV.  A query row left with zero valid keys (e.g.
+    ``kv_len=0``, or ``window=1`` rows beyond ``kv_len``) outputs exactly
+    zero rather than a uniform average over masked keys.
+    """
     bh, s, hd = q.shape
     bq, bk = min(block_q, s), min(block_k, s)
     assert s % bq == 0 and s % bk == 0, (s, bq, bk)
     grid = (bh, s // bq, s // bk)
     scale = float(1.0 / np.sqrt(hd))
     kernel = functools.partial(
-        _flash_kernel, causal=causal, window=window, block_q=bq, block_k=bk,
-        num_k_blocks=s // bk, scale=scale)
+        _flash_kernel, causal=causal, window=window, kv_len=kv_len,
+        block_q=bq, block_k=bk, num_k_blocks=s // bk, scale=scale)
     return pl.pallas_call(
         kernel,
         grid=grid,

@@ -16,6 +16,7 @@ from . import ref
 from .act_quant import act_dequant, act_quant
 from .flash_attn import flash_attention
 from .fused_ffn import fused_ffn
+from .paged_decode_attn import paged_decode_attention
 from .ssd_scan import ssd_scan
 
 
@@ -53,10 +54,11 @@ def gated_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
     return ref.fused_ffn_ref(x, w_gate, w_up, w_down, activation)
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window",
+@functools.partial(jax.jit, static_argnames=("causal", "window", "kv_len",
                                              "use_pallas", "interpret"))
 def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
-              window: int = 0, use_pallas: bool = False,
+              window: int = 0, kv_len: int | None = None,
+              use_pallas: bool = False,
               interpret: bool = False) -> jax.Array:
     """q,k,v: (B, H, S, hd) with kv already broadcast to H."""
     b, h, s, hd = q.shape
@@ -64,10 +66,35 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
         out = flash_attention(q.reshape(b * h, s, hd),
                               k.reshape(b * h, s, hd),
                               v.reshape(b * h, s, hd),
-                              causal=causal, window=window,
+                              causal=causal, window=window, kv_len=kv_len,
                               interpret=not _on_tpu())
         return out.reshape(b, h, s, hd)
-    return ref.flash_attn_ref(q, k, v, causal=causal, window=window)
+    return ref.flash_attn_ref(q, k, v, causal=causal, window=window,
+                              kv_len=kv_len)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas",
+                                             "interpret"))
+def paged_attention(q: jax.Array, k_blocks: jax.Array, v_blocks: jax.Array,
+                    tables: jax.Array, pos: jax.Array, k_new: jax.Array,
+                    v_new: jax.Array, k_scale: jax.Array | None = None,
+                    v_scale: jax.Array | None = None, window: int = 0,
+                    use_pallas: bool = False,
+                    interpret: bool = False) -> jax.Array:
+    """Single-query decode attention straight off a BlockPool table.
+
+    q: (slots, H, hd); k/v_blocks: (num_blocks, bs, kvh, hd);
+    tables: (slots, mb) int32 runtime data; pos: (slots,) resident tokens;
+    k/v_new: (slots, kvh, hd) current-token KV (not yet scattered);
+    k/v_scale: optional (num_blocks, bs) per-row int8 scales."""
+    if use_pallas and (_on_tpu() or interpret):
+        return paged_decode_attention(
+            q, k_blocks, v_blocks, tables, pos, k_new, v_new,
+            k_scale=k_scale, v_scale=v_scale, window=window,
+            interpret=not _on_tpu())
+    return ref.paged_decode_attn_ref(
+        q, k_blocks, v_blocks, tables, pos, k_new, v_new,
+        k_scale=k_scale, v_scale=v_scale, window=window)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",

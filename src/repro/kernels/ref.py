@@ -34,6 +34,43 @@ def act_dequant_ref(q: jax.Array, scale: jax.Array,
     return xb.reshape(m, n).astype(dtype)
 
 
+def act_quant4_ref(x: jax.Array, block: int = 128
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int4 quantization, two codes packed per byte.
+
+    The code range is the symmetric [-7, 7] (the -8 point is deliberately
+    unused so negation round-trips inside the code space and the scale is
+    amax/7 on both sides); codes are stored biased by +8 into [1, 15] and
+    packed little-nibble-first: byte j holds column 2j in its low nibble
+    and column 2j+1 in its high nibble.
+
+    x: (M, N) with N % block == 0 and N even
+    -> (packed uint8 (M, N//2), scales f32 (M, N/block))."""
+    m, n = x.shape
+    xb = x.reshape(m, n // block, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    scale = amax / 7.0 + 1e-12
+    q = jnp.clip(jnp.round(xb / scale), -7, 7) + 8.0
+    q = q.reshape(m, n).astype(jnp.uint8)
+    lo, hi = q[:, 0::2], q[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8), scale[..., 0]
+
+
+def act_dequant4_ref(packed: jax.Array, scale: jax.Array,
+                     dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of ``act_quant4_ref``: unpack nibbles (low nibble = even
+    column), un-bias to [-7, 7], and rescale per block.
+    packed: (M, N//2) uint8; scale: (M, N/block) -> (M, N)."""
+    m, half = packed.shape
+    n = half * 2
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = (packed >> 4).astype(jnp.int8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(m, n)
+    block = n // scale.shape[1]
+    xb = q.reshape(m, n // block, block).astype(jnp.float32) * scale[..., None]
+    return xb.reshape(m, n).astype(dtype)
+
+
 # ----------------------------------------------------------- fused_ffn -----
 def fused_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
                   w_down: jax.Array, activation: str = "silu") -> jax.Array:
@@ -46,9 +83,13 @@ def fused_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
 
 # ---------------------------------------------------------- flash_attn -----
 def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                   causal: bool = True, window: int = 0) -> jax.Array:
+                   causal: bool = True, window: int = 0,
+                   kv_len: int | None = None) -> jax.Array:
     """Single-head-batched attention oracle.
-    q: (B, H, S, hd); k, v: (B, H, S, hd)  (kv heads pre-broadcast)."""
+    q: (B, H, S, hd); k, v: (B, H, S, hd)  (kv heads pre-broadcast).
+    ``kv_len`` masks keys at positions >= kv_len; a query row with zero
+    valid keys outputs exactly zero (matching the kernel's masked-row
+    guard) instead of softmax's uniform average over -1e30 scores."""
     b, h, s, hd = q.shape
     scale = 1.0 / np.sqrt(hd)
     scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
@@ -60,10 +101,61 @@ def flash_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask &= rows >= cols
     if window:
         mask &= cols > rows - window
+    if kv_len is not None:
+        mask &= cols < kv_len
     scores = jnp.where(mask, scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
+    p = p * jnp.any(mask, axis=-1, keepdims=True)
     out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# ----------------------------------------------------- paged decode attn ----
+def paged_decode_attn_ref(q: jax.Array, k_blocks: jax.Array,
+                          v_blocks: jax.Array, tables: jax.Array,
+                          pos: jax.Array, k_new: jax.Array,
+                          v_new: jax.Array, *,
+                          k_scale: jax.Array | None = None,
+                          v_scale: jax.Array | None = None,
+                          window: int = 0) -> jax.Array:
+    """Single-query GQA attention over a paged KV pool (oracle).
+
+    q: (slots, H, hd); k/v_blocks: (num_blocks, bs, kvh, hd) — ONE layer's
+    pool slice; tables: (slots, mb) int32 block ids; pos: (slots,) — the
+    number of tokens already in the pool (pool columns < pos are valid);
+    k_new/v_new: (slots, kvh, hd) — the current token's KV, folded in as an
+    always-valid extra key (it has NOT been scattered into the pool yet).
+    Optional k/v_scale: (num_blocks, bs) f32 per-row int8 scales.
+    ``window`` keeps pool columns > pos - window (the new token is position
+    ``pos``, so with window w the valid set is (pos-w, pos]).
+    Returns (slots, H, hd) in q.dtype."""
+    slots, h, hd = q.shape
+    nb, bs, kvh, _ = k_blocks.shape
+    mb = tables.shape[1]
+    g = h // kvh
+    scale = 1.0 / np.sqrt(hd)
+
+    def one(qi, tbl, p, kn, vn):
+        kf = k_blocks[tbl].astype(jnp.float32).reshape(mb * bs, kvh, hd)
+        vf = v_blocks[tbl].astype(jnp.float32).reshape(mb * bs, kvh, hd)
+        if k_scale is not None:
+            kf = kf * k_scale[tbl].reshape(mb * bs, 1, 1)
+            vf = vf * v_scale[tbl].reshape(mb * bs, 1, 1)
+        cols = jnp.arange(mb * bs)
+        valid = cols < p
+        if window:
+            valid &= cols > p - window
+        kf = jnp.concatenate([kf, kn.astype(jnp.float32)[None]], axis=0)
+        vf = jnp.concatenate([vf, vn.astype(jnp.float32)[None]], axis=0)
+        valid = jnp.concatenate([valid, jnp.ones((1,), bool)])
+        qg = qi.astype(jnp.float32).reshape(kvh, g, hd) * scale
+        s = jnp.einsum("kgh,skh->kgs", qg, kf)
+        s = jnp.where(valid[None, None, :], s, -1e30)
+        p_attn = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("kgs,skh->kgh", p_attn, vf)
+        return out.reshape(h, hd)
+
+    return jax.vmap(one)(q, tables, pos, k_new, v_new).astype(q.dtype)
 
 
 # ------------------------------------------------------------- ssd_scan ----

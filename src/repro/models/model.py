@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from . import attention as attn_mod
 from . import moe as moe_mod
 from . import ssm as ssm_mod
+from ..kernels import ops as kernel_ops
+from ..kernels.act_quant import kv_dequant_rows, kv_quant_rows
 from .configs import ATTN, LOCAL, MAMBA, ModelConfig
 from .layers import (Params, dtype_of, embed_lookup, ffn_apply, matmul_w,
                      rms_norm, unembed)
@@ -29,8 +31,8 @@ __all__ = ["init_params", "forward", "lm_loss", "init_cache", "prefill",
            "greedy_batched_step", "sample_logits", "sample_step",
            "sample_batched_step", "admit_slot", "batched_prefill_admit",
            "init_paged_pool", "init_paged_slot_cache",
-           "paged_sample_batched_step", "paged_prefill_admit",
-           "paged_thaw_write", "paged_copy_block"]
+           "paged_sample_batched_step", "paged_kernel_sample_batched_step",
+           "paged_prefill_admit", "paged_thaw_write", "paged_copy_block"]
 
 
 def _n_attn_layers(cfg: ModelConfig) -> int:
@@ -275,15 +277,31 @@ def init_paged_pool(cfg: ModelConfig, num_blocks: int, block_size: int,
                     opts: RuntimeOptions = DEFAULT_OPTIONS) -> Cache:
     """The device block pool: ``{"k","v"}`` of shape ``(num_blocks,
     n_attn_layers, block_size, num_kv_heads, head_dim)``.  Block 0 is
-    the trash block (see :mod:`repro.serving.paging`)."""
+    the trash block (see :mod:`repro.serving.paging`).
+
+    ``opts.kv_dtype == "int8"`` stores the blocks int8 and adds
+    ``{"k_scale","v_scale"}`` leaves of shape ``(num_blocks, n_attn,
+    block_size)`` — one f32 scale per KV *row* (token × layer), the
+    append granularity of both prefill blockify and the decode scatter.
+    Every paged writer quantizes through :func:`kv_quant_rows` and every
+    reader (gather step, kernel step, engine freeze) dequantizes, so the
+    pool is ~4x denser for the same HBM."""
     n_attn = _n_attn_layers(cfg)
     if not n_attn:
         raise ValueError("paged decode requires an attention stack "
                          f"(arch_type={cfg.arch_type!r} has no KV cache)")
-    kv_dt = dtype_of(opts.kv_cache_dtype)
+    if opts.kv_dtype not in ("auto", "int8"):
+        raise ValueError(f"kv_dtype={opts.kv_dtype!r} (want 'auto' or 'int8')")
+    store_int8 = opts.kv_dtype == "int8"
+    kv_dt = jnp.int8 if store_int8 else dtype_of(opts.kv_cache_dtype)
     shape = (num_blocks, n_attn, block_size, cfg.num_kv_heads,
              cfg.resolved_head_dim)
-    return {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+    pool = {"k": jnp.zeros(shape, kv_dt), "v": jnp.zeros(shape, kv_dt)}
+    if store_int8:
+        sshape = (num_blocks, n_attn, block_size)
+        pool["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        pool["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return pool
 
 
 def init_paged_slot_cache(cfg: ModelConfig, slots: int, max_seq: int,
@@ -309,18 +327,26 @@ def paged_sample_batched_step(params: Params, cfg: ModelConfig,
     and thawed blocks are private), so no two real writes collide;
     masked slots write the trash block, whose content is never read
     unmasked.  Returns ``(next_tokens, positions, new slot cache,
-    new pool)``."""
+    new pool)``.
+
+    An int8 pool (``opts.kv_dtype == "int8"``) dequantizes per row while
+    gathering and re-quantizes the newly written row before the scatter —
+    the dense computation in the middle is unchanged."""
     pk, pv = pool["k"], pool["v"]
+    psk, psv = pool.get("k_scale"), pool.get("v_scale")
     _, n_attn, bs, kvh, hd = pk.shape
     mb = tables.shape[1]
+    kv_dt = dtype_of(opts.kv_cache_dtype)
 
     def one(c: Cache, tok: jax.Array, tbl: jax.Array):
-        def dense_view(p):
+        def dense_view(p, scl):
             g = p[tbl]                          # (mb, n_attn, bs, kvh, hd)
+            if scl is not None:
+                g = kv_dequant_rows(g, scl[tbl], kv_dt)
             return jnp.moveaxis(g, 0, 1).reshape(n_attn, 1, mb * bs, kvh, hd)
 
         dense = dict(c)
-        dense["k"], dense["v"] = dense_view(pk), dense_view(pv)
+        dense["k"], dense["v"] = dense_view(pk, psk), dense_view(pv, psv)
         wpos = c["pos"]                         # this step writes row wpos
         nxt, c2 = sample_step(params, cfg, dense, tok, opts)
         row_k = jax.lax.dynamic_slice_in_dim(c2["k"], wpos, 1, axis=2)
@@ -332,9 +358,199 @@ def paged_sample_batched_step(params: Params, cfg: ModelConfig,
 
     nxt, pos, new_cache, rk, rv, blks, offs = jax.vmap(one)(
         slot_cache, tokens, tables)
-    new_pool = {"k": pk.at[blks, :, offs].set(rk.astype(pk.dtype)),
-                "v": pv.at[blks, :, offs].set(rv.astype(pv.dtype))}
+    new_pool = _scatter_kv_rows(pool, rk, rv, blks, offs)
     return nxt, pos, new_cache, new_pool
+
+
+def _scatter_kv_rows(pool: Cache, rk: jax.Array, rv: jax.Array,
+                     blks: jax.Array, offs: jax.Array) -> Cache:
+    """Write one KV row per slot into its tail block.  ``rk``/``rv``:
+    ``(slots, n_attn, kvh, hd)``; ``blks``/``offs``: ``(slots,)``.
+    Quantizes the rows first when the pool stores int8."""
+    new_pool = dict(pool)
+    if "k_scale" in pool:
+        rk, sk = kv_quant_rows(rk)
+        rv, sv = kv_quant_rows(rv)
+        new_pool["k_scale"] = pool["k_scale"].at[blks, :, offs].set(sk)
+        new_pool["v_scale"] = pool["v_scale"].at[blks, :, offs].set(sv)
+    new_pool["k"] = pool["k"].at[blks, :, offs].set(rk.astype(pool["k"].dtype))
+    new_pool["v"] = pool["v"].at[blks, :, offs].set(rv.astype(pool["v"].dtype))
+    return new_pool
+
+
+def _attn_decode_paged(layer: Params, x: jax.Array, kb, vb, ks, vs,
+                       tables, pos, sin, cos, cfg: ModelConfig,
+                       opts: RuntimeOptions, *, window: int, cross_kv=None):
+    """One-token attention block reading KV straight off the block table.
+
+    Slot-batched twin of :func:`_attn_decode`: x is ``(slots, D)``,
+    ``kb``/``vb`` are ONE layer's pool blocks ``(num_blocks, bs, kvh,
+    hd)`` (``ks``/``vs`` the matching int8 scales or ``None``), ``pos``
+    is per-slot.  Attention runs through :func:`kernel_ops.paged_attention`
+    (Pallas on TPU, ``ref.py`` oracle elsewhere); the new token's KV is
+    *returned* — ``(slots, kvh, hd)`` each — for one batched scatter at
+    the end of the step instead of being written into the pool here."""
+    b, d = x.shape
+    hd = cfg.resolved_head_dim
+    h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+    a = layer["attn"]
+    q = matmul_w(h, a["wq"]).reshape(b, cfg.num_heads, hd)
+    k = matmul_w(h, a["wk"]).reshape(b, cfg.num_kv_heads, hd)
+    v = matmul_w(h, a["wv"]).reshape(b, cfg.num_kv_heads, hd)
+    if "bq" in a:
+        q = q + a["bq"].reshape(cfg.num_heads, hd)
+        k = k + a["bk"].reshape(cfg.num_kv_heads, hd)
+        v = v + a["bv"].reshape(cfg.num_kv_heads, hd)
+    q = _apply_rot1(q, sin, cos)
+    k = _apply_rot1(k, sin, cos)
+    w = window or opts.decode_window
+    out = kernel_ops.paged_attention(
+        q, kb, vb, tables, pos, k, v, ks, vs, window=w,
+        use_pallas=opts.use_pallas)
+    x = x + matmul_w(out.reshape(b, cfg.num_heads * hd), a["wo"]).astype(x.dtype)
+
+    if cross_kv is not None and "cross" in layer:
+        hq = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+        c = layer["cross"]
+        qc = (hq @ c["wq"]).reshape(b, cfg.num_heads, hd)
+        ck, cv = cross_kv
+        out = attn_mod.decode_attention(qc, ck.astype(x.dtype),
+                                        cv.astype(x.dtype),
+                                        jnp.int32(ck.shape[1] - 1), window=0)
+        x = x + (out.reshape(b, cfg.num_heads * hd) @ c["wo"]).astype(x.dtype)
+
+    h2 = rms_norm(x, layer["ln2"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        y = moe_mod.moe_apply_decode(layer["moe"], h2, cfg)
+    else:
+        y = ffn_apply(layer["ffn"], h2, gated=cfg.gated_ffn,
+                      activation=cfg.activation)
+    return x + y.astype(x.dtype), k, v
+
+
+def paged_kernel_sample_batched_step(params: Params, cfg: ModelConfig,
+                                     slot_cache: Cache, pool: Cache,
+                                     tokens: jax.Array, tables: jax.Array,
+                                     opts: RuntimeOptions = DEFAULT_OPTIONS):
+    """One sampling decode step over paged KV — no gather-to-dense detour.
+
+    Drop-in twin of :func:`paged_sample_batched_step` (same signature,
+    same return contract) selected by ``opts.paged_kernel``: instead of
+    materializing a dense ``(mb * bs)`` view per slot, every layer's
+    attention reads its pool blocks *through the block table* via
+    :func:`kernel_ops.paged_attention` (the Pallas decode kernel on TPU,
+    its ``ref.py`` oracle elsewhere).  The whole step is slot-batched
+    directly — q/k/v projections, FFN and sampling run at batch = slots
+    with per-slot rotary phases — rather than ``vmap`` of a batch-1 step.
+    Tables and positions stay runtime data, so occupancy/fragmentation
+    never recompiles; int8 pools pass their per-row scales straight into
+    the kernel's block loop (dequant on chip, never in HBM).
+
+    §Perf: the pool is viewed layer-major (``moveaxis(pool, 1, 0)``) so
+    ``lax.scan`` can carry one layer's blocks per iteration — XLA fuses
+    the transpose into the scan gather, but a layer-major pool layout
+    would make it free."""
+    from .layers import (cast_params, mask_padded_logits_raw,
+                         rotary_embedding)
+    act_dt = dtype_of(cfg.activation_dtype)
+    params = cast_params(params, act_dt)
+    x = embed_lookup(params["embed"], tokens).astype(act_dt)  # (slots, D)
+    pos = slot_cache["pos"]                                   # (slots,)
+    pk, pv = pool["k"], pool["v"]
+    _, n_attn, bs, kvh, hd = pk.shape
+    has_scales = "k_scale" in pool
+    pk_l = jnp.moveaxis(pk, 1, 0)       # (n_attn, num_blocks, bs, kvh, hd)
+    pv_l = jnp.moveaxis(pv, 1, 0)
+    ks_l = jnp.moveaxis(pool["k_scale"], 1, 0) if has_scales else None
+    vs_l = jnp.moveaxis(pool["v_scale"], 1, 0) if has_scales else None
+    sin, cos = rotary_embedding(pos[:, None], hd, cfg.rope_theta)
+    tables = tables.astype(jnp.int32)
+
+    kinds, _ = _pattern_period(cfg)
+    period = len(kinds)
+    has_cross = cfg.is_encoder_decoder
+    n = cfg.num_layers
+    n_full = (n // period) * period
+    new_cache = dict(slot_cache)
+
+    def run_layer(x, layer, j_kind, kb, vb, ksb, vsb, ckv):
+        w = cfg.sliding_window if j_kind == LOCAL else 0
+        return _attn_decode_paged(layer, x, kb, vb, ksb, vsb, tables, pos,
+                                  sin, cos, cfg, opts, window=w,
+                                  cross_kv=ckv)
+
+    def layer_step(carry, xs):
+        x = carry
+        if has_cross:
+            layer_pp, kbp, vbp, ksp, vsp, ck, cv = xs
+        else:
+            layer_pp, kbp, vbp, ksp, vsp = xs
+            ck = cv = None
+        rks, rvs = [], []
+        for j, kind in enumerate(kinds):
+            layer = jax.tree_util.tree_map(lambda a: a[j], layer_pp)
+            ckv = (ck[j], cv[j]) if has_cross else None
+            x, k1, v1 = run_layer(x, layer, kind, kbp[j], vbp[j],
+                                  None if ksp is None else ksp[j],
+                                  None if vsp is None else vsp[j], ckv)
+            rks.append(k1)
+            rvs.append(v1)
+        return x, (jnp.stack(rks), jnp.stack(rvs))
+
+    row_k = row_v = None
+    if n_full:
+        def group(a):
+            return a[:n_full].reshape(n_full // period, period, *a.shape[1:])
+
+        grouped = jax.tree_util.tree_map(group, params["layers"])
+        xs = (grouped, group(pk_l), group(pv_l),
+              None if ks_l is None else group(ks_l),
+              None if vs_l is None else group(vs_l))
+        if has_cross:
+            # cross KV is a slot leaf (slots, n_layers, 1, enc_seq, kvh, hd);
+            # rearrange layer-major for the scan, dropping the batch=1 axis
+            ckg = group(jnp.moveaxis(slot_cache["cross_k"][:, :, 0], 0, 1))
+            cvg = group(jnp.moveaxis(slot_cache["cross_v"][:, :, 0], 0, 1))
+            xs = xs + (ckg, cvg)
+        # None scale entries are empty pytrees — scan passes them through
+        x, (rk_o, rv_o) = jax.lax.scan(layer_step, x, xs)
+        row_k = rk_o.reshape(n_full, *rk_o.shape[2:])   # (n_full, slots, ...)
+        row_v = rv_o.reshape(n_full, *rv_o.shape[2:])
+    rows_k_tail, rows_v_tail = [], []
+    for j in range(n_full, n):
+        layer = jax.tree_util.tree_map(lambda a: a[j], params["layers"])
+        kind = kinds[(j - n_full) % period]
+        ckv = ((slot_cache["cross_k"][:, j, 0],
+                slot_cache["cross_v"][:, j, 0]) if has_cross else None)
+        x, k1, v1 = run_layer(x, layer, kind, pk_l[j], pv_l[j],
+                              None if ks_l is None else ks_l[j],
+                              None if vs_l is None else vs_l[j], ckv)
+        rows_k_tail.append(k1)
+        rows_v_tail.append(v1)
+    if rows_k_tail:
+        tail_k, tail_v = jnp.stack(rows_k_tail), jnp.stack(rows_v_tail)
+        row_k = tail_k if row_k is None else jnp.concatenate([row_k, tail_k])
+        row_v = tail_v if row_v is None else jnp.concatenate([row_v, tail_v])
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    logits = mask_padded_logits_raw(logits, cfg.vocab_size)
+    s = slot_cache["sample"]
+    nxt, new_keys = jax.vmap(
+        lambda lg, ky, t, tk: sample_logits(lg, ky, t, tk, cfg.vocab_size)
+    )(logits, s["key"], s["temp"], s["top_k"])
+    new_cache["sample"] = {"key": new_keys, "temp": s["temp"],
+                           "top_k": s["top_k"]}
+    new_cache["pos"] = pos + 1
+
+    # one batched scatter of every layer's new row into each slot's tail
+    # block (same collision-freedom argument as the gather step)
+    rk = jnp.moveaxis(row_k, 0, 1)                  # (slots, n_attn, kvh, hd)
+    rv = jnp.moveaxis(row_v, 0, 1)
+    blks = jnp.take_along_axis(tables, (pos // bs)[:, None], axis=1)[:, 0]
+    offs = pos % bs
+    new_pool = _scatter_kv_rows(pool, rk, rv, blks, offs)
+    return nxt, new_cache["pos"], new_cache, new_pool
 
 
 def paged_prefill_admit(params: Params, cfg: ModelConfig, slot_cache: Cache,
@@ -364,11 +580,15 @@ def paged_prefill_admit(params: Params, cfg: ModelConfig, slot_cache: Cache,
         return jnp.moveaxis(a, 2, 1).reshape(k * nblk, n_attn, bs, kvh, hd)
 
     flat = dest_blocks.reshape(-1)
-    new_pool = {
-        "k": pool["k"].at[flat].set(blockify(cache["k"])
-                                    .astype(pool["k"].dtype)),
-        "v": pool["v"].at[flat].set(blockify(cache["v"])
-                                    .astype(pool["v"].dtype))}
+    new_pool = dict(pool)
+    bk, bv = blockify(cache["k"]), blockify(cache["v"])
+    if "k_scale" in pool:                # quantize at append time
+        bk, sk = kv_quant_rows(bk)
+        bv, sv = kv_quant_rows(bv)
+        new_pool["k_scale"] = pool["k_scale"].at[flat].set(sk)
+        new_pool["v_scale"] = pool["v_scale"].at[flat].set(sv)
+    new_pool["k"] = pool["k"].at[flat].set(bk.astype(pool["k"].dtype))
+    new_pool["v"] = pool["v"].at[flat].set(bv.astype(pool["v"].dtype))
     out = slot_cache
     model_side = {key: v for key, v in slot_cache.items() if key != "sample"}
     row_src = {key: v for key, v in cache.items() if key not in ("k", "v")}
@@ -389,16 +609,26 @@ def paged_thaw_write(pool: Cache, rows_k: jax.Array, rows_v: jax.Array,
                      ids: jax.Array) -> Cache:
     """Scatter a thawed request's densified KV back into pool blocks.
     ``rows_k``/``rows_v``: ``(nblk, n_attn, block_size, kvh, hd)``;
-    ``ids``: ``(nblk,)`` freshly allocated (private) block indices."""
-    return {"k": pool["k"].at[ids].set(rows_k.astype(pool["k"].dtype)),
-            "v": pool["v"].at[ids].set(rows_v.astype(pool["v"].dtype))}
+    ``ids``: ``(nblk,)`` freshly allocated (private) block indices.
+    Frozen blobs stay portable (``kv_cache_dtype``), so an int8 pool
+    re-quantizes on thaw — for rows that were quantized at freeze this is
+    effectively the identity (the max-code row recovers its scale)."""
+    new_pool = dict(pool)
+    if "k_scale" in pool:
+        rows_k, sk = kv_quant_rows(rows_k)
+        rows_v, sv = kv_quant_rows(rows_v)
+        new_pool["k_scale"] = pool["k_scale"].at[ids].set(sk)
+        new_pool["v_scale"] = pool["v_scale"].at[ids].set(sv)
+    new_pool["k"] = pool["k"].at[ids].set(rows_k.astype(pool["k"].dtype))
+    new_pool["v"] = pool["v"].at[ids].set(rows_v.astype(pool["v"].dtype))
+    return new_pool
 
 
 def paged_copy_block(pool: Cache, src: jax.Array, dst: jax.Array) -> Cache:
     """Copy-on-write: duplicate block ``src`` into ``dst`` (both traced,
-    one program covers every pair)."""
-    return {"k": pool["k"].at[dst].set(pool["k"][src]),
-            "v": pool["v"].at[dst].set(pool["v"][src])}
+    one program covers every pair).  Generic over the pool's leaves, so
+    int8 scale planes ride along with their blocks."""
+    return {name: arr.at[dst].set(arr[src]) for name, arr in pool.items()}
 
 
 # =========================================================== decode blocks ==

@@ -31,6 +31,16 @@ class RuntimeOptions:
     # the up/gate matmul outputs stay sharded on d_ff (matching the weight
     # sharding) and only the (B,S,D)-sized w_down output is reduced
     ffn_shard_axis: str = ""
+    # Paged-pool storage dtype: "auto" follows kv_cache_dtype; "int8" stores
+    # KV blocks as int8 with per-row f32 scales (~4x resident slots per
+    # device).  Only read by decode_mode="paged"; dense caches keep
+    # kv_cache_dtype.
+    kv_dtype: str = "auto"
+    # Paged decode reads KV straight from block tables via the Pallas
+    # decode-attention op instead of gathering the pool to dense first.
+    # Tables stay runtime data either way, so flipping this only changes
+    # which program the CompileCache builds — never how it is keyed.
+    paged_kernel: bool = False
 
     def replace(self, **kw) -> "RuntimeOptions":
         return dataclasses.replace(self, **kw)

@@ -50,9 +50,12 @@ runtime int32 arrays of constant shape, so occupancy, sharing and
 admission churn never recompile and the outer cache key stays
 ``(cfg, opts, slots, max_seq, domain)``:
 
-* ``paged_decode(nb, bs)`` — one batched sampling step gathering each
-                     slot's blocks into a dense view (slot cache + pool
-                     donated); bit-identical to ``decode``
+* ``paged_decode(nb, bs)`` — one batched sampling step (slot cache +
+                     pool donated); bit-identical to ``decode``.  With
+                     ``opts.paged_kernel`` the program is the
+                     kernel step (attention reads blocks through the
+                     table — no gather-to-dense detour); ``opts`` is in
+                     the cache key, so the selection never aliases
 * ``paged_prefill_batch(bucket, k, nb, bs)`` — burst admission that
                      scatters prefilled KV into destination blocks
 * ``paged_admit``   — writes non-KV leaves + sampling state into one
@@ -70,7 +73,9 @@ import jax
 from repro.models.configs import ModelConfig
 from repro.models.model import (admit_slot, batched_prefill_admit,
                                 decode_step, greedy_batched_step,
-                                paged_copy_block, paged_prefill_admit,
+                                paged_copy_block,
+                                paged_kernel_sample_batched_step,
+                                paged_prefill_admit,
                                 paged_sample_batched_step, paged_thaw_write,
                                 prefill, sample_batched_step, sample_logits,
                                 sample_step)
@@ -145,14 +150,17 @@ class ServePrograms:
                      block_size: int) -> Tuple[Callable, bool]:
         """The batched paged sampling step for one pool geometry.  Slot
         cache and pool are donated; block tables ride in as runtime
-        data, so every occupancy shares this one program."""
+        data, so every occupancy shares this one program.
+        ``opts.paged_kernel`` swaps in the block-table attention step
+        (same signature, no gather-to-dense detour)."""
         key = (num_blocks, block_size)
         fresh = key not in self._paged_decodes
         if fresh:
             cfg, opts = self._cfg, self._opts
+            step = (paged_kernel_sample_batched_step if opts.paged_kernel
+                    else paged_sample_batched_step)
             self._paged_decodes[key] = jax.jit(
-                lambda p, c, pl, t, tb: paged_sample_batched_step(
-                    p, cfg, c, pl, t, tb, opts),
+                lambda p, c, pl, t, tb: step(p, cfg, c, pl, t, tb, opts),
                 donate_argnums=(1, 2))
         return self._paged_decodes[key], fresh
 

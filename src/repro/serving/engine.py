@@ -31,6 +31,13 @@ Two decode paths share the scheduler:
   admissions share prefill blocks, copy-on-write), and a full-prompt
   prefix cache re-admits an already-seen padded prompt without any
   prefill jit call.  Token streams are bit-identical to ``"batched"``.
+  Two runtime options specialize this path (both live in
+  ``RuntimeOptions``, hence in every CompileCache key and freeze/thaw
+  fingerprint): ``paged_kernel=True`` decodes through the Pallas
+  block-table attention kernel — attention reads KV straight from pool
+  blocks, no gather-to-dense detour — and ``kv_dtype="int8"`` stores
+  the pool int8 with per-row scales (~4x resident slots per device;
+  greedy streams match the f32 pool on the differential corpus).
 
 Any non-``per_slot`` engine can **freeze** an in-flight request into a
 host-side :class:`~repro.serving.paging.FrozenRequest` blob (pages
@@ -65,15 +72,16 @@ from __future__ import annotations
 import itertools
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.act_quant import kv_dequant_rows
 from repro.models.configs import ModelConfig
-from repro.models.layers import Params
+from repro.models.layers import Params, dtype_of
 from repro.models.model import (init_cache, init_paged_pool,
                                 init_paged_slot_cache, init_slot_cache)
 from repro.models.runtime import DEFAULT_OPTIONS, RuntimeOptions
@@ -264,6 +272,10 @@ class ServingEngine:
                 raise ValueError(f"pool_blocks {pool_blocks} cannot hold "
                                  "one full-length request (need "
                                  f"{per_slot_blocks + 1})")
+        elif opts.kv_dtype != "auto" or opts.paged_kernel:
+            raise ValueError("kv_dtype/paged_kernel are paged-pool options; "
+                             f"decode_mode={decode_mode!r} keeps its dense "
+                             "cache in kv_cache_dtype")
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -1030,8 +1042,18 @@ class ServingEngine:
     def fingerprint(self) -> tuple:
         """The freeze/thaw compatibility fingerprint: a
         :class:`FrozenRequest` thaws here iff its fingerprint equals
-        this (same config, same runtime options, same weights)."""
-        return (self.cfg, self.opts, self.params_version)
+        this (same config, same runtime options, same weights).
+
+        Pool-*storage* options are normalized out: blobs are densified
+        in ``kv_cache_dtype`` regardless of how the pool stores them, so
+        an ``kv_dtype="int8"`` engine's blob thaws on a bf16-pool peer
+        (and vice versa — thaw re-quantizes), and ``paged_kernel`` never
+        touches blob layout at all.  Cross-``kv_dtype`` continuations
+        are token-loss-free and re-prefill-free but decode with the
+        destination's numerics, so they are not bit-identical to an
+        uninterrupted source run."""
+        opts = replace(self.opts, kv_dtype="auto", paged_kernel=False)
+        return (self.cfg, opts, self.params_version)
 
     def can_thaw(self, frozen: Optional[FrozenRequest]) -> bool:
         """Whether a frozen blob can resume on this engine without
@@ -1070,13 +1092,19 @@ class ServingEngine:
             if name in leaves:
                 leaves[name] = leaves[name][:, :, :pos]
         if self.decode_mode == "paged":
-            # gather this slot's blocks into dense (n_attn, 1, pos, ...) KV
+            # gather this slot's blocks into dense (n_attn, 1, pos, ...) KV;
+            # int8 pools dequantize first so the blob stays portable in
+            # kv_cache_dtype (any engine can thaw it, re-quantizing or not)
             bs = self.block_size
             nblk = blocks_needed(pos, bs)
             ids = self._blocks.tables[slot, :nblk]
             for name in ("k", "v"):
-                g = np.asarray(jax.device_get(
-                    self._pool[name][jnp.asarray(ids)]))
+                blocks = self._pool[name][jnp.asarray(ids)]
+                if name + "_scale" in self._pool:
+                    blocks = kv_dequant_rows(
+                        blocks, self._pool[name + "_scale"][jnp.asarray(ids)],
+                        dtype_of(self.opts.kv_cache_dtype))
+                g = np.asarray(jax.device_get(blocks))
                 n_attn, kvh, hd = g.shape[1], g.shape[3], g.shape[4]
                 dense = g.transpose(1, 0, 2, 3, 4).reshape(
                     n_attn, nblk * bs, kvh, hd)[:, :pos]

@@ -66,6 +66,24 @@ def blocks_needed(n_rows: int, block_size: int) -> int:
     return -(-n_rows // block_size)
 
 
+def kv_bytes_per_block(n_attn: int, block_size: int, num_kv_heads: int,
+                       head_dim: int, kv_dtype: str = "auto",
+                       kv_cache_dtype: str = "bfloat16") -> int:
+    """Device bytes one pool block costs (K + V, plus int8 scale planes).
+
+    ``kv_dtype`` mirrors ``RuntimeOptions.kv_dtype``: ``"auto"`` stores
+    blocks in ``kv_cache_dtype``; ``"int8"`` stores one byte per element
+    plus a ``(n_attn, block_size)`` f32 scale plane per side — the
+    denominator of the bench's residency-gain axis (how many more slots
+    fit in the same pool budget when the KV store is quantized)."""
+    elems = n_attn * block_size * num_kv_heads * head_dim
+    if kv_dtype == "int8":
+        return 2 * (elems + 4 * n_attn * block_size)
+    itemsize = {"float32": 4, "bfloat16": 2, "float16": 2,
+                "fp8": 1}.get(kv_cache_dtype, 2)
+    return 2 * elems * itemsize
+
+
 def block_hash_chain(padded_tokens: np.ndarray, block_size: int,
                      salt: Any = None) -> List[bytes]:
     """Chain hashes of a left-padded prompt, one per *full* block.

@@ -132,6 +132,11 @@ def trajectory_entry(root: Path, label: str) -> dict:
         root, "BENCH_serving.json",
         "slots.4.batched.tokens_per_s", "slots.4.speedup",
         "bit_identical", "obs_overhead.overhead_factor")
+    pk_tps, pk_match, pk_gain = _maybe(
+        root, "BENCH_serving.json",
+        "paged_kernel.kernel_int8.tokens_per_s",
+        "paged_kernel.greedy_matches_dense",
+        "paged_kernel.residency_gain")
     p_ratio, p_ttft, p_bit = _maybe(
         root, "BENCH_paging.json",
         "differential.paged_over_dense_throughput",
@@ -150,7 +155,10 @@ def trajectory_entry(root: Path, label: str) -> dict:
         "serving": {"tokens_per_s_slots4": s_tps,
                     "batched_speedup_slots4": s_speedup,
                     "bit_identical": s_bit,
-                    "obs_overhead_factor": s_obs},
+                    "obs_overhead_factor": s_obs,
+                    "paged_kernel_int8_tokens_per_s": pk_tps,
+                    "paged_kernel_matches_dense": pk_match,
+                    "int8_residency_gain": pk_gain},
         "paging": {"paged_over_dense_throughput": p_ratio,
                    "prefix_ttft_speedup": p_ttft,
                    "bit_identical": p_bit},
